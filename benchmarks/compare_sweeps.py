@@ -1,0 +1,55 @@
+"""Render the §Roofline comparison: baseline vs optimized dry-run records.
+
+  PYTHONPATH=src python -m benchmarks.compare_sweeps \
+      --base experiments/dryrun --opt experiments/dryrun_opt [--mesh 16x16]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+
+from benchmarks.roofline import fmt_s
+
+
+def load(dirpath):
+    out = {}
+    for p in sorted(pathlib.Path(dirpath).glob("*.json")):
+        r = json.loads(p.read_text())
+        out[(r.get("arch"), r.get("shape"), r.get("mesh", "16x16"))] = r
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--base", default="experiments/dryrun")
+    ap.add_argument("--opt", default="experiments/dryrun_opt")
+    ap.add_argument("--mesh", default="16x16")
+    args = ap.parse_args()
+    base = load(args.base)
+    opt = load(args.opt)
+
+    print("| arch | shape | bound before | bound after | speedup | dominant "
+          "after | peak GB before→after | frac after |")
+    print("|---|---|---|---|---|---|---|---|")
+    for key in sorted(base):
+        arch, shape, mesh = key
+        if mesh != args.mesh:
+            continue
+        b, o = base[key], opt.get(key)
+        if "skipped" in b:
+            continue
+        if o is None or "roofline" not in o or "roofline" not in b:
+            continue
+        tb, to = b["roofline"], o["roofline"]
+        sp = tb["bound_s"] / max(to["bound_s"], 1e-12)
+        print(f"| {arch} | {shape} | {fmt_s(tb['bound_s'])} | "
+              f"{fmt_s(to['bound_s'])} | **{sp:.2f}x** | "
+              f"{to['dominant'].replace('_s','')} | "
+              f"{b['memory']['peak_gb_per_chip']}→"
+              f"{o['memory']['peak_gb_per_chip']} | "
+              f"{to['roofline_frac']} |")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,72 @@
+"""Kernel micro-benchmarks (CPU wall-clock of the XLA reference paths; the
+Pallas kernels are validated in interpret mode and TARGET the TPU — CPU
+timings of interpret mode are meaningless, so what we time here is the
+packed-vs-dense REPRESENTATION effect that survives on any backend, plus the
+spikformer step)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+
+
+def timeit(f, *args, n=5) -> float:
+    f(*args)  # compile
+    jax.block_until_ready(f(*args))
+    t0 = time.perf_counter()
+    for _ in range(n):
+        out = f(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / n * 1e6  # us
+
+
+def run() -> dict:
+    out = {}
+    kx, kw = jax.random.split(jax.random.PRNGKey(0))
+
+    # packed spike matmul (8 planes in one byte) vs 8 dense fp32 matmuls
+    m, k, n = 512, 512, 512
+    xp = jax.random.randint(kx, (m, k), 0, 256, jnp.uint8)
+    w = jax.random.normal(kw, (k, n))
+    dense = jax.random.normal(kx, (8, m, k))
+
+    out["spike_matmul_packed_us"] = timeit(
+        jax.jit(lambda a, b: ref.spike_matmul_ref(a, b)), xp, w)
+    out["dense_8plane_matmul_us"] = timeit(
+        jax.jit(lambda a, b: jnp.einsum("pmk,kn->pmn", a, b)), dense, w)
+    out["packed_hbm_bytes"] = int(xp.size)
+    out["dense_hbm_bytes"] = int(dense.size * 4)
+    out["activation_bytes_saving_x"] = out["dense_hbm_bytes"] / out["packed_hbm_bytes"]
+
+    # STDP associativity: (QK^T)V vs Q(K^TV) wall time at N >> Dh
+    q = (jax.random.uniform(kx, (8, 1024, 64)) < 0.3).astype(jnp.float32)
+    out["stdp_naive_us"] = timeit(
+        jax.jit(lambda a, b, c: jnp.einsum(
+            "bnm,bmd->bnd", jnp.einsum("bnd,bmd->bnm", a, b), c)), q, q, q)
+    out["stdp_assoc_us"] = timeit(
+        jax.jit(lambda a, b, c: jnp.einsum(
+            "bnd,bdf->bnf", a, jnp.einsum("bnd,bnf->bdf", b, c))), q, q, q)
+    out["stdp_speedup_x"] = out["stdp_naive_us"] / out["stdp_assoc_us"]
+
+    # spikformer reduced fwd+bwd step
+    from repro.core.spikformer import SpikformerConfig, init, loss_fn
+    cfg = SpikformerConfig().scaled()
+    p = init(jax.random.PRNGKey(0), cfg)
+    img = jax.random.randint(kx, (4, 32, 32, 3), 0, 256, jnp.uint8)
+    batch = {"image": img, "label": jnp.array([0, 1, 2, 3])}
+    step = jax.jit(jax.grad(lambda pp: loss_fn(pp, batch, cfg)[0]))
+    out["spikformer_reduced_grad_us"] = timeit(step, p, n=3)
+    return out
+
+
+def main():
+    for k, v in run().items():
+        print(f"kernel,{k},{v:.6g}" if isinstance(v, float)
+              else f"kernel,{k},{v}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,85 @@
+"""Roofline reporting: reads the dry-run records under experiments/dryrun and
+renders the §Roofline table (terms in seconds, dominant bottleneck, useful-
+flops ratio, roofline fraction) plus the hillclimb shortlist.
+
+  PYTHONPATH=src python -m benchmarks.roofline [--dir experiments/dryrun]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+
+
+def load(dirpath: str) -> list[dict]:
+    recs = []
+    for p in sorted(pathlib.Path(dirpath).glob("*.json")):
+        r = json.loads(p.read_text())
+        recs.append(r)
+    return recs
+
+
+def fmt_s(x: float) -> str:
+    if x >= 0.1:
+        return f"{x:.3f}s"
+    if x >= 1e-4:
+        return f"{x*1e3:.2f}ms"
+    return f"{x*1e6:.1f}us"
+
+
+def table(recs: list[dict], mesh: str = "16x16") -> str:
+    rows = []
+    hdr = ("| arch | shape | compute | memory | collective | dominant | "
+           "peak GB | useful | frac |")
+    sep = "|" + "---|" * 9
+    rows.append(hdr)
+    rows.append(sep)
+    for r in recs:
+        if r.get("mesh") != mesh:
+            continue
+        if "skipped" in r:
+            rows.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                        f"skip: {r['skipped'][:40]} | — | — | — |")
+            continue
+        if "error" in r:
+            rows.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                        f"ERROR {r['error'][:40]} | — | — | — |")
+            continue
+        t = r["roofline"]
+        m = r["memory"]
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {fmt_s(t['compute_s'])} | "
+            f"{fmt_s(t['memory_s'])} | {fmt_s(t['collective_s'])} | "
+            f"**{t['dominant'].replace('_s','')}** | "
+            f"{m['peak_gb_per_chip']} | {t['useful_flops_ratio']} | "
+            f"{t['roofline_frac']} |")
+    return "\n".join(rows)
+
+
+def shortlist(recs: list[dict]) -> list[dict]:
+    """The three hillclimb picks: worst roofline fraction (train cells),
+    most collective-bound, most paper-representative."""
+    ok = [r for r in recs if "roofline" in r and r.get("mesh") == "16x16"]
+    train = [r for r in ok if r["kind"] == "train"]
+    worst = min(train, key=lambda r: r["roofline"]["roofline_frac"],
+                default=None)
+    coll = max(ok, key=lambda r: r["roofline"]["collective_s"], default=None)
+    return [r for r in (worst, coll) if r]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--mesh", default="16x16")
+    args = ap.parse_args()
+    recs = load(args.dir)
+    print(table(recs, args.mesh))
+    print()
+    for r in shortlist(recs):
+        t = r["roofline"]
+        print(f"hillclimb-candidate,{r['arch']},{r['shape']},"
+              f"{t['dominant']},{t['bound_s']}")
+
+
+if __name__ == "__main__":
+    main()

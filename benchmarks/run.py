@@ -1,0 +1,47 @@
+"""Benchmark orchestrator: one section per paper table + kernels +
+compression transport + the roofline summary (if dry-run records exist).
+Every line is ``section,name,value`` CSV.
+
+  PYTHONPATH=src python -m benchmarks.run
+"""
+from __future__ import annotations
+
+import pathlib
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (table1_engine, table2_distribution,
+                            table3_buffers, kernel_bench, compression_bench)
+    sections = [
+        ("table1 (throughput/efficiency)", table1_engine.main),
+        ("table2 (compute-time distribution)", table2_distribution.main),
+        ("table3 (buffer savings)", table3_buffers.main),
+        ("kernels", kernel_bench.main),
+        ("compression transport", compression_bench.main),
+    ]
+    failed = []
+    for name, fn in sections:
+        print(f"# --- {name} ---", flush=True)
+        try:
+            fn()
+        except Exception:
+            failed.append(name)
+            traceback.print_exc()
+
+    from benchmarks import roofline
+    for name, d in (("baseline", "experiments/dryrun"),
+                    ("optimized (post-§Perf)", "experiments/dryrun_opt")):
+        if pathlib.Path(d).exists() and any(pathlib.Path(d).glob("*.json")):
+            print(f"# --- roofline, {name} ({d}) ---", flush=True)
+            print(roofline.table(roofline.load(d)))
+
+    if failed:
+        print(f"FAILED sections: {failed}", file=sys.stderr)
+        sys.exit(1)
+    print("# all benchmark sections completed")
+
+
+if __name__ == "__main__":
+    main()

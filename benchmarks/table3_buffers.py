@@ -1,0 +1,103 @@
+"""Paper Table III analog: buffer-size reductions of each proposed method.
+
+The paper states qualitative checkmarks; we quantify them for Spikformer
+V2-8-512 @ 224px (T=4):
+
+  STDP  — bytes held for attention: one V column tile vs full N x N scores +
+          full V (the paper's 'reduce buffer size' for SSA). We report both
+          the ASIC-side counts and the TPU VMEM tile footprint of our Pallas
+          kernel schedule.
+  TFLIF — output storage: 1 bit/spike packed vs 8-bit accumulators per
+          timestep (the Output SRAM saving).
+  WSSL  — the MLP2 carry: 192-bit segment buffer vs materializing the
+          (2048 -> 512) intermediate per column group.
+  ZSC   — conv stem: streaming space-to-depth (no im2col buffer) vs a full
+          im2col expansion.
+
+Measured cross-check: peak temp bytes of the chunked STDP jaxpr vs the naive
+(QK^T)V jaxpr on a reduced config, from compiled.memory_analysis().
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.spikformer import SpikformerConfig
+
+
+def analytic(cfg: SpikformerConfig | None = None) -> dict:
+    cfg = cfg or SpikformerConfig()
+    t, n, d, h = cfg.timesteps, cfg.tokens, cfg.dim, cfg.heads
+    dh = d // h
+
+    rows = {}
+    # --- STDP ---------------------------------------------------------------
+    naive_scores = t * h * n * n * 4            # fp32 scores
+    naive_v = t * h * n * dh                    # V spikes held in full (1B)
+    stdp_tile = t * h * dh * dh * 4             # K^T V context tile (fp32)
+    rows["stdp_naive_bytes"] = naive_scores + naive_v
+    rows["stdp_tiled_bytes"] = stdp_tile
+    rows["stdp_saving_x"] = (naive_scores + naive_v) / stdp_tile
+
+    # --- TFLIF --------------------------------------------------------------
+    per_layer_outputs = n * d                   # one encoder linear's outputs
+    rows["tflif_unpacked_bytes"] = t * per_layer_outputs        # int8 / step
+    rows["tflif_packed_bytes"] = per_layer_outputs // 8 * t     # 1 bit
+    rows["tflif_saving_x"] = 8.0
+
+    # --- WSSL ---------------------------------------------------------------
+    # MLP2 (2048 -> 512): 4 column segments of 512; carry = 2 pixels x 4
+    # timesteps x 24-bit partials = 192 bits (the paper's number) vs the
+    # full hidden map t*n*2048 int8.
+    rows["wssl_carry_bits"] = 192
+    rows["wssl_naive_intermediate_bytes"] = t * n * (d * cfg.mlp_ratio)
+    rows["wssl_saving_x"] = rows["wssl_naive_intermediate_bytes"] / (192 / 8)
+
+    # --- ZSC ----------------------------------------------------------------
+    side = cfg.img_size // 2                     # after conv0
+    c1 = cfg.scs_channels[0]
+    im2col = t * (side // 2) * (side // 2) * (4 * c1)   # 1B spikes expanded
+    rows["zsc_im2col_bytes"] = im2col
+    rows["zsc_streaming_bytes"] = 4 * c1 * 2 * 8  # two 2x2 groups in flight
+    rows["zsc_saving_x"] = im2col / rows["zsc_streaming_bytes"]
+    return rows
+
+
+def measured_stdp_peak() -> dict:
+    """Compiled peak-temp bytes: naive (QK^T)V vs K^T-first STDP on one head
+    group — the associativity VESTA's tiling exploits, visible to XLA."""
+    t, b, h, n, dh = 4, 1, 8, 1024, 64
+
+    def naive(q, k, v):
+        s = jnp.einsum("tbhnd,tbhmd->tbhnm", q, k)
+        return jnp.einsum("tbhnm,tbhmf->tbhnf", s, v) * 0.125
+
+    def tiled(q, k, v):
+        ctx = jnp.einsum("tbhnd,tbhnf->tbhdf", k, v)
+        return jnp.einsum("tbhnd,tbhdf->tbhnf", q, ctx) * 0.125
+
+    sds = jax.ShapeDtypeStruct((t, b, h, n, dh), jnp.float32)
+    out = {}
+    for name, fn in (("naive", naive), ("tiled", tiled)):
+        ma = jax.jit(fn).lower(sds, sds, sds).compile().memory_analysis()
+        out[f"stdp_{name}_temp_bytes_measured"] = ma.temp_size_in_bytes
+    out["stdp_measured_saving_x"] = (
+        out["stdp_naive_temp_bytes_measured"]
+        / max(out["stdp_tiled_temp_bytes_measured"], 1))
+    return out
+
+
+def run() -> dict:
+    rows = analytic()
+    rows.update(measured_stdp_peak())
+    return rows
+
+
+def main():
+    for k, v in run().items():
+        print(f"table3,{k},{v:.6g}" if isinstance(v, float)
+              else f"table3,{k},{v}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,27 @@
+"""Single-cell multi-pod dry-run demo: lower + compile qwen3-moe-30b-a3b
+train_4k against the 2x16x16 (512-chip) production mesh on this CPU-only
+container, then print the memory/cost/roofline record.
+
+  PYTHONPATH=src python examples/dryrun_demo.py [--arch ...] [--shape ...]
+"""
+# The 512 placeholder devices MUST be configured before jax initializes —
+# importing repro.launch.dryrun first does exactly that.
+from repro.launch import dryrun  # noqa: F401  (sets XLA_FLAGS at import)
+
+import argparse
+import json
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-moe-30b-a3b")
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--single-pod", action="store_true")
+    args = ap.parse_args()
+    rec, compiled = dryrun.lower_cell(args.arch, args.shape,
+                                      multi_pod=not args.single_pod)
+    print(json.dumps(rec, indent=1))
+
+
+if __name__ == "__main__":
+    main()

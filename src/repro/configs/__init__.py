@@ -1,0 +1,2 @@
+from .base import (ArchConfig, ShapeSpec, SHAPES, ARCH_IDS, get_config,
+                   register, cell_applicable, input_specs)  # noqa: F401

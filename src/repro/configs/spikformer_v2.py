@@ -1,0 +1,13 @@
+"""spikformer-v2-8-512 — the paper's own model (VESTA's workload), exposed
+alongside the 10 assigned LM architectures. It is a vision SNN, not an LM,
+so it lives outside the (arch x LM-shape) dry-run grid; its production
+instantiation is the full 224x224 ImageNet config below and its launchers
+are examples/train_spikformer.py + the core/spikformer module.
+"""
+from ..core.spikformer import SpikformerConfig
+
+# full paper config: 8 encoder blocks, dim 512, T=4, 224px, 1000 classes
+CONFIG = SpikformerConfig()
+
+# CPU-scale smoke config (used by tests/examples)
+REDUCED = CONFIG.scaled()

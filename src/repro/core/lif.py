@@ -1,0 +1,125 @@
+"""LIF neurons with surrogate gradients, and the Temporal-Fused LIF (TFLIF).
+
+Dynamics (spikingjelly-style LIF used by Spikformer, v_reset = 0):
+
+    h_t = v_{t-1} + (x_t - v_{t-1}) / tau        (charge)
+    s_t = H(h_t - v_th)                          (fire; H = Heaviside)
+    v_t = h_t * (1 - s_t)                        (hard reset)
+
+Backward uses the atan surrogate  dH/du ~= alpha / (2 * (1 + (pi/2*alpha*u)^2)).
+
+TFLIF is VESTA's contribution: all T timesteps are processed in one fused pass
+(T lives in registers, outputs are emitted as packed spikes), and the BN layer
+that always precedes LIF is folded into the preceding conv/linear (scale into
+weights, bias into the accumulator) so BN never runs as a separate layer. The
+threshold comparison happens inside the same fused op ("subtract v_th from the
+BN bias" in the paper's per-timestep comparator).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+TAU = 2.0
+V_TH = 1.0
+SURROGATE_ALPHA = 2.0
+
+
+@jax.custom_vjp
+def spike_fn(u):
+    """Heaviside with atan surrogate gradient. u = membrane - threshold."""
+    return (u >= 0.0).astype(u.dtype)
+
+
+def _spike_fwd(u):
+    return spike_fn(u), u
+
+
+def _spike_bwd(u, g):
+    sg = SURROGATE_ALPHA / (2.0 * (1.0 + (jnp.pi / 2.0 * SURROGATE_ALPHA * u) ** 2))
+    return (g * sg,)
+
+
+spike_fn.defvjp(_spike_fwd, _spike_bwd)
+
+
+def lif_step(v, x, *, tau: float = TAU, v_th: float = V_TH):
+    """One LIF timestep. Returns (v_next, spike)."""
+    h = v + (x - v) / tau
+    s = spike_fn(h - v_th)
+    v_next = h * (1.0 - s)
+    return v_next, s
+
+
+def tflif(x, *, tau: float = TAU, v_th: float = V_TH, time_axis: int = 0):
+    """Temporal-Fused LIF: input (T, ...) accumulator values -> (T, ...) spikes.
+
+    The whole T axis is processed in one fused scan (T stays on-chip); pair with
+    ``core.spike.pack_bits`` to store the result 1-bit-per-spike, and with
+    ``fold_bn`` below so no separate BN layer ever executes. The Pallas TPU
+    kernel version lives in ``repro.kernels.tflif``; this is the reference
+    (identical math, used for training via surrogate-grad BPTT).
+    """
+    x = jnp.moveaxis(x, time_axis, 0)
+    v0 = jnp.zeros_like(x[0])
+
+    def step(v, xt):
+        v_next, s = lif_step(v, xt, tau=tau, v_th=v_th)
+        return v_next, s
+
+    _, spikes = jax.lax.scan(step, v0, x)
+    return jnp.moveaxis(spikes, 0, time_axis)
+
+
+# ---------------------------------------------------------------------------
+# BN folding (the TFLIF "bias - threshold" merge)
+# ---------------------------------------------------------------------------
+
+def bn_init(c: int, dtype=jnp.float32):
+    return {
+        "scale": jnp.ones((c,), dtype),
+        "bias": jnp.zeros((c,), dtype),
+        "mean": jnp.zeros((c,), dtype),
+        "var": jnp.ones((c,), dtype),
+    }
+
+
+def bn_apply(p, x, *, eps: float = 1e-5):
+    """Inference-mode BN over the last axis (reference path, pre-fold)."""
+    inv = jax.lax.rsqrt(p["var"].astype(jnp.float32) + eps)
+    g = p["scale"].astype(jnp.float32) * inv
+    b = p["bias"].astype(jnp.float32) - p["mean"].astype(jnp.float32) * g
+    return x.astype(jnp.float32) * g + b
+
+
+def fold_bn(kernel, bias, bn, *, eps: float = 1e-5):
+    """Fold inference BN into the preceding linear/conv: returns (kernel', bias')
+    such that BN(x @ k + b) == x @ k' + b'. kernel: (..., d_in, C)."""
+    inv = jax.lax.rsqrt(bn["var"].astype(jnp.float32) + eps)
+    g = bn["scale"].astype(jnp.float32) * inv                      # (C,)
+    b = bn["bias"].astype(jnp.float32) - bn["mean"].astype(jnp.float32) * g
+    kernel_f = kernel.astype(jnp.float32) * g                      # scale out-channels
+    bias_f = (bias.astype(jnp.float32) * g + b) if bias is not None else b
+    return kernel_f.astype(kernel.dtype), bias_f
+
+
+def batch_stats(x, axes):
+    """Training-mode batch statistics for BN (used by the training path)."""
+    mean = jnp.mean(x, axis=axes)
+    var = jnp.var(x, axis=axes)
+    return mean, var
+
+
+def bn_train_apply(p, x, axes, *, eps: float = 1e-5, momentum: float = 0.9):
+    """Training BN: normalize with batch stats; returns (y, new_stats)."""
+    x32 = x.astype(jnp.float32)
+    mean, var = batch_stats(x32, axes)
+    inv = jax.lax.rsqrt(var + eps)
+    y = (x32 - mean) * inv * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    new = {
+        "mean": momentum * p["mean"] + (1 - momentum) * mean,
+        "var": momentum * p["var"] + (1 - momentum) * var,
+    }
+    return y.astype(x.dtype), new

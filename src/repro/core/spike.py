@@ -1,0 +1,60 @@
+"""Spike-form data handling: bit-packing and encodings.
+
+VESTA's PE unit feeds 8 binary inputs against one shared 8-bit weight. The
+TPU-native analogue is *storage*: spikes live packed 8-per-uint8 in HBM (the
+"Small Input SRAM" / "Output SRAM" of the paper), and kernels unpack them in
+VMEM. This is where the 8x activation-bandwidth saving comes from.
+
+Plane semantics:
+  * temporal packing  — the 8 bits are (T=4 timesteps x 2 tokens) or up to 8
+    timesteps: used by ZSC / WSSL / STDP. Each plane is an independent output.
+  * bit-plane packing — the 8 bits are the binary expansion of a uint8 pixel:
+    used by SSSC. Planes are summed with weights 2^k.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+_POWERS = 2 ** jnp.arange(8, dtype=jnp.uint8)
+
+
+def pack_bits(x, axis: int = -1):
+    """Pack a binary {0,1} array along ``axis`` (size must be multiple of 8)
+    into uint8. Output has that axis shrunk 8x."""
+    x = jnp.moveaxis(x, axis, -1)
+    assert x.shape[-1] % 8 == 0, f"pack axis {x.shape[-1]} not multiple of 8"
+    x = x.reshape(*x.shape[:-1], x.shape[-1] // 8, 8).astype(jnp.uint8)
+    packed = (x * _POWERS).sum(axis=-1, dtype=jnp.uint32).astype(jnp.uint8)
+    return jnp.moveaxis(packed, -1, axis)
+
+
+def unpack_bits(x, axis: int = -1, *, count: int = 8, dtype=jnp.float32):
+    """Inverse of pack_bits: uint8 -> {0,1} planes; axis grows 8x (or ``count``
+    bits per byte if count < 8)."""
+    x = jnp.moveaxis(x, axis, -1)
+    bits = (x[..., None] >> jnp.arange(count, dtype=jnp.uint8)) & jnp.uint8(1)
+    bits = bits.reshape(*x.shape[:-1], x.shape[-1] * count).astype(dtype)
+    return jnp.moveaxis(bits, -1, axis)
+
+
+def bitplanes_u8(x, *, dtype=jnp.float32):
+    """uint8 tensor (...,) -> (8, ...) binary planes, LSB first (SSSC input)."""
+    planes = (x[None, ...] >> jnp.arange(8, dtype=jnp.uint8).reshape(
+        (8,) + (1,) * x.ndim)) & jnp.uint8(1)
+    return planes.astype(dtype)
+
+
+def rate_decode(spikes, axis: int = 0):
+    """Spike train -> rate (mean over timesteps); classification readout."""
+    return spikes.astype(jnp.float32).mean(axis=axis)
+
+
+def space_to_depth(x, block: int = 2):
+    """(..., H, W, C) -> (..., H/b, W/b, b*b*C). This *is* the ZSC zig-zag
+    placement: a 2x2/s2 convolution becomes a plain matmul over 4C features."""
+    *lead, h, w, c = x.shape
+    assert h % block == 0 and w % block == 0, (h, w, block)
+    x = x.reshape(*lead, h // block, block, w // block, block, c)
+    x = jnp.moveaxis(x, -4, -3)  # (..., H/b, W/b, b, b, C)
+    return x.reshape(*lead, h // block, w // block, block * block * c)

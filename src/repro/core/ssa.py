@@ -1,0 +1,56 @@
+"""Spiking Self-Attention (SSA) — the attention of Spikformer V2.
+
+Q, K, V are spike tensors (binary), produced by Linear+BN+LIF stacks; the
+attention map is ``(Q Kt) V * scale`` with NO softmax (spikes are non-negative
+so no normalization is needed — Spikformer uses a fixed scale instead). That
+is exactly what makes VESTA's STDP tiling possible: V columns are consumed as
+soon as they are produced.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+from ..nn.module import KeyStream
+from ..nn.layers import linear_init
+from .lif import bn_init, bn_train_apply, bn_apply, tflif
+from .unified import wssl, stdp
+
+
+def ssa_init(key, dim: int, heads: int, dtype=jnp.float32):
+    ks = KeyStream(key)
+    p = {}
+    for name in ("wq", "wk", "wv", "wo"):
+        p[name] = linear_init(ks(), dim, dim, bias=False, dtype=dtype)
+        p[name + "_bn"] = bn_init(dim, dtype)
+    return p
+
+
+def _lin_bn_lif(pw, pbn, x, *, train: bool):
+    """spikes (T,B,N,D) -> Linear -> BN -> TFLIF -> spikes. Returns (s, stats)."""
+    y = wssl(x, pw["kernel"])                    # (T,B,N,F) accumulator
+    if train:
+        y, stats = bn_train_apply(pbn, y, axes=(0, 1, 2))
+    else:
+        y, stats = bn_apply(pbn, y), None
+    return tflif(y), stats
+
+
+def ssa_apply(p, x, *, heads: int, scale: float, train: bool = False):
+    """x: (T, B, N, D) spikes -> (T, B, N, D) spikes, plus BN-stat updates."""
+    t, b, n, d = x.shape
+    dh = d // heads
+    new_stats = {}
+    q, st = _lin_bn_lif(p["wq"], p["wq_bn"], x, train=train); new_stats["wq_bn"] = st
+    k, st = _lin_bn_lif(p["wk"], p["wk_bn"], x, train=train); new_stats["wk_bn"] = st
+    v, st = _lin_bn_lif(p["wv"], p["wv_bn"], x, train=train); new_stats["wv_bn"] = st
+
+    def to_heads(z):
+        return z.reshape(t, b, n, heads, dh).transpose(0, 1, 3, 2, 4)
+
+    attn = stdp(to_heads(q), to_heads(k), to_heads(v), scale=scale)  # (T,B,H,N,dh)
+    attn = tflif(attn)                       # spike the attention output
+    attn = attn.transpose(0, 1, 3, 2, 4).reshape(t, b, n, d)
+    out, st = _lin_bn_lif(p["wo"], p["wo_bn"], attn, train=train); new_stats["wo_bn"] = st
+    return out, new_stats

@@ -1,0 +1,93 @@
+"""The unified PE: VESTA's four dataflows expressed on one engine.
+
+All four computational layer types of the spiking transformer reduce to ONE
+primitive — a weight-stationary matmul over binary planes — differing only in
+(a) where the planes come from and (b) how planes are reduced:
+
+  WSSL  planes = T timesteps of spikes,   per-plane outputs (weight stationary)
+  ZSC   planes = T timesteps of spikes,   conv2x2/s2 == space-to-depth + WSSL
+  SSSC  planes = 8 bit-planes of a uint8, outputs summed with scales 2^k
+  STDP  planes = T timesteps,             (Q Kt) V fused tile-wise, no softmax
+
+This module is the float/differentiable reference used for training (spikes
+are {0,1} floats carrying surrogate gradients). The packed-bit inference path
+lives in ``repro.kernels`` (Pallas, `spike_matmul` / `stdp_attention`), with
+``repro.kernels.ops`` dispatching between them.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .spike import space_to_depth, bitplanes_u8
+
+
+def wssl(spikes, kernel, bias=None, *, compute_dtype=jnp.float32):
+    """Weight-Stationary Spiking Linear.
+
+    spikes: (T, ..., D) binary; kernel: (D, F). The T axis is folded into the
+    row dimension so one weight fetch serves all timesteps (the paper computes
+    one output column per weight column across the whole T-fused input map;
+    XLA's matmul does the same weight-stationary loop once T is folded).
+    """
+    t = spikes.shape[0]
+    lead = spikes.shape[1:-1]
+    d = spikes.shape[-1]
+    x = spikes.reshape((-1, d)).astype(compute_dtype)
+    y = x @ kernel.astype(compute_dtype)
+    if bias is not None:
+        y = y + bias.astype(compute_dtype)
+    return y.reshape((t, *lead, kernel.shape[-1]))
+
+
+def zsc(spikes, kernel, bias=None, *, compute_dtype=jnp.float32):
+    """Zig-Zag Spiking Convolution: 2x2/stride-2 conv over spike inputs.
+
+    spikes: (T, B, H, W, C); kernel: (2, 2, C, F). The zig-zag placement of
+    2x2 input submatrices across timesteps == space-to-depth so that every
+    output pixel is one row of a T-fused matmul (full PE utilization).
+    """
+    x = space_to_depth(spikes, 2)                       # (T,B,H/2,W/2,4C)
+    k = kernel.reshape((-1, kernel.shape[-1]))          # (4C, F)
+    return wssl(x, k, bias, compute_dtype=compute_dtype)
+
+
+def sssc(image_u8, kernel, bias=None, *, compute_dtype=jnp.float32):
+    """Shift-and-Sum Spiking Convolution: first-layer 2x2/s2 conv on uint8.
+
+    image_u8: (B, H, W, C) uint8; kernel: (2, 2, C, F). The 8-bit input is
+    decomposed into 8 binary planes which run through the SAME binary datapath
+    as WSSL/ZSC, then partial results are summed with shifts:
+        y = sum_k 2^k * (plane_k . W)
+    Output is (B, H/2, W/2, F) — identical to an 8-bit conv. Because the image
+    is constant across timesteps, SSSC runs once and the result is reused for
+    all T (paper Sec. II-D).
+    """
+    x = space_to_depth(image_u8, 2)                     # (B,H/2,W/2,4C) uint8
+    planes = bitplanes_u8(x, dtype=compute_dtype)       # (8, B, H/2, W/2, 4C)
+    k = kernel.reshape((-1, kernel.shape[-1]))
+    per_plane = wssl(planes, k, None, compute_dtype=compute_dtype)  # (8,...,F)
+    scales = (2.0 ** jnp.arange(8, dtype=compute_dtype)).reshape(
+        (8,) + (1,) * (per_plane.ndim - 1))
+    y = (per_plane * scales).sum(axis=0)
+    if bias is not None:
+        y = y + bias.astype(y.dtype)
+    return y
+
+
+def stdp(q, k, v, *, scale: float, compute_dtype=jnp.float32):
+    """Spiking Tile-wise Dot Product: softmax-free attention (Q Kt) V * scale.
+
+    q, k, v: (T, B, H, N, Dh) binary spikes. Since spike attention has no
+    softmax, each V column can be consumed as soon as it is produced; the
+    reference computes Kt V first — an exactly equivalent associativity choice
+    ((Q Kt) V == Q (Kt V)) that, like the paper's tiling, never materializes
+    the N x N score matrix when N > Dh. The Pallas kernel
+    (``kernels.stdp_attention``) implements the tile-fused streaming version.
+    """
+    qf = q.astype(compute_dtype)
+    kf = k.astype(compute_dtype)
+    vf = v.astype(compute_dtype)
+    ctx = jnp.einsum("tbhnd,tbhnf->tbhdf", kf, vf)       # (T,B,H,Dh,Dh')
+    out = jnp.einsum("tbhnd,tbhdf->tbhnf", qf, ctx) * scale
+    return out

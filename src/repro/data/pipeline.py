@@ -1,0 +1,204 @@
+"""Sharded, checkpointable data pipeline.
+
+Design (1000-node posture):
+  * every *host* owns a disjoint shard of the global batch — `host_id` /
+    `n_hosts` select it deterministically from the stream index, so adding a
+    host never reshuffles another host's data (elastic-friendly);
+  * the pipeline is a pure function of (seed, step) => restart-safe: the
+    checkpoint stores ONLY the integer step; no iterator pickling;
+  * a background prefetch thread keeps `prefetch` batches ready so host
+    input never blocks the device step;
+  * sources: synthetic LM tokens (zipf-ish unigram mixture — compressible
+    structure so loss curves are meaningful), a binary token-file reader
+    (memory-mapped, fixed-length records), and spikformer image batches.
+
+The same pipeline object also serves the *global-array* path: on a multi-
+host deployment each host feeds its local rows and
+``jax.make_array_from_process_local_data`` assembles the sharded global
+batch. On this single-process container that reduces to a device_put.
+"""
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+from typing import Iterator
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class DataConfig:
+    seq: int = 1024
+    global_batch: int = 8
+    vocab: int = 50_000
+    seed: int = 0
+    kind: str = "synthetic_lm"      # synthetic_lm | token_file | images
+    path: str | None = None         # token_file: .bin of uint32 tokens
+    image_size: int = 32            # images
+    n_classes: int = 10             # images
+    host_id: int = 0
+    n_hosts: int = 1
+    prefetch: int = 2
+
+    @property
+    def local_batch(self) -> int:
+        assert self.global_batch % self.n_hosts == 0, \
+            (self.global_batch, self.n_hosts)
+        return self.global_batch // self.n_hosts
+
+
+# ---------------------------------------------------------------------------
+# deterministic per-(step, host) generation
+# ---------------------------------------------------------------------------
+
+def _rng_for(cfg: DataConfig, step: int, row: int) -> np.random.Generator:
+    # stable across restarts and host counts: keyed by the GLOBAL row index
+    return np.random.default_rng(
+        np.random.SeedSequence([cfg.seed, step, row]))
+
+
+def _synthetic_row(cfg: DataConfig, step: int, grow: int) -> np.ndarray:
+    """One (seq+1,) token row: mixture of a zipf unigram draw and short
+    repeated motifs — learnable structure for real loss curves."""
+    rng = _rng_for(cfg, step, grow)
+    n = cfg.seq + 1
+    # zipf over the vocab, clipped
+    toks = rng.zipf(1.3, size=n).astype(np.int64)
+    toks = np.clip(toks, 1, cfg.vocab - 1)
+    # motif: repeat a short pattern at a random offset (copy task structure);
+    # cap the motif so it fits even for very short sequences
+    hi = max(9, min(32, n // 2 + 1))
+    mlen = int(rng.integers(min(8, hi - 1), hi))
+    motif = rng.integers(1, cfg.vocab, size=mlen)
+    reps = max(1, n // (4 * mlen))
+    for r in range(reps):
+        off = int(rng.integers(0, max(1, n - mlen)))
+        toks[off:off + mlen] = motif
+    return toks.astype(np.int32)
+
+
+def synthetic_lm_batch(cfg: DataConfig, step: int) -> dict:
+    rows = []
+    for local_row in range(cfg.local_batch):
+        grow = cfg.host_id * cfg.local_batch + local_row
+        rows.append(_synthetic_row(cfg, step, grow))
+    arr = np.stack(rows)                                    # (B, S+1)
+    return {"tokens": arr[:, :-1], "labels": arr[:, 1:]}
+
+
+def image_batch(cfg: DataConfig, step: int) -> dict:
+    """Synthetic labeled images: class-conditional blobs (learnable)."""
+    imgs, labels = [], []
+    for local_row in range(cfg.local_batch):
+        grow = cfg.host_id * cfg.local_batch + local_row
+        rng = _rng_for(cfg, step, grow)
+        label = int(rng.integers(0, cfg.n_classes))
+        base = np.full((cfg.image_size, cfg.image_size, 3),
+                       20 * label + 30, np.float32)
+        # class-dependent stripe pattern + noise
+        xs = np.arange(cfg.image_size)
+        stripe = 60.0 * np.sin(xs * (label + 1) / 3.0)
+        base += stripe[None, :, None]
+        base += rng.normal(0, 12, base.shape)
+        imgs.append(np.clip(base, 0, 255).astype(np.uint8))
+        labels.append(label)
+    return {"image": np.stack(imgs), "label": np.array(labels, np.int32)}
+
+
+class TokenFileSource:
+    """Memory-mapped uint32 token file; rows are contiguous seq+1 windows
+    strided deterministically by (step, row) so restart is exact."""
+
+    def __init__(self, cfg: DataConfig):
+        self.cfg = cfg
+        self.tokens = np.memmap(cfg.path, dtype=np.uint32, mode="r")
+        self.n_windows = max(1, (len(self.tokens) - 1) // (cfg.seq + 1))
+
+    def batch(self, step: int) -> dict:
+        rows = []
+        for local_row in range(self.cfg.local_batch):
+            grow = self.cfg.host_id * self.cfg.local_batch + local_row
+            w = (step * self.cfg.global_batch + grow) % self.n_windows
+            start = w * (self.cfg.seq + 1)
+            rows.append(np.asarray(
+                self.tokens[start:start + self.cfg.seq + 1], np.int32))
+        arr = np.stack(rows)
+        return {"tokens": arr[:, :-1], "labels": arr[:, 1:]}
+
+
+# ---------------------------------------------------------------------------
+# the pipeline
+# ---------------------------------------------------------------------------
+
+class DataPipeline:
+    """Checkpointable prefetching pipeline. State == one integer (`step`)."""
+
+    def __init__(self, cfg: DataConfig, *, start_step: int = 0,
+                 sharding=None):
+        self.cfg = cfg
+        self.step = start_step
+        self.sharding = sharding
+        self._file = TokenFileSource(cfg) if cfg.kind == "token_file" else None
+        self._q: queue.Queue = queue.Queue(maxsize=max(1, cfg.prefetch))
+        self._stop = threading.Event()
+        self._thread = threading.Thread(target=self._producer, daemon=True)
+        self._thread.start()
+
+    # -- generation ---------------------------------------------------------
+    def _make(self, step: int) -> dict:
+        if self.cfg.kind == "synthetic_lm":
+            return synthetic_lm_batch(self.cfg, step)
+        if self.cfg.kind == "token_file":
+            return self._file.batch(step)
+        if self.cfg.kind == "images":
+            return image_batch(self.cfg, step)
+        raise ValueError(self.cfg.kind)
+
+    def _producer(self):
+        step = self.step
+        while not self._stop.is_set():
+            batch = self._make(step)
+            while not self._stop.is_set():
+                try:
+                    self._q.put((step, batch), timeout=0.1)
+                    break
+                except queue.Full:
+                    continue
+            step += 1
+
+    # -- consumption ---------------------------------------------------------
+    def __iter__(self) -> Iterator[dict]:
+        return self
+
+    def __next__(self) -> dict:
+        step, batch = self._q.get()
+        # prefetch thread races ahead; trust its step accounting
+        self.step = step + 1
+        if self.sharding is not None:
+            batch = {k: jax.device_put(v, self.sharding.get(k))
+                     for k, v in batch.items()}
+        else:
+            batch = {k: jnp.asarray(v) for k, v in batch.items()}
+        return batch
+
+    # -- checkpointing --------------------------------------------------------
+    def state_dict(self) -> dict:
+        return {"step": int(self.step), "seed": self.cfg.seed}
+
+    @classmethod
+    def restore(cls, cfg: DataConfig, state: dict, **kw) -> "DataPipeline":
+        assert state.get("seed", cfg.seed) == cfg.seed, \
+            "restoring a pipeline with a different data seed"
+        return cls(cfg, start_step=int(state["step"]), **kw)
+
+    def close(self):
+        self._stop.set()
+        try:
+            while True:
+                self._q.get_nowait()
+        except queue.Empty:
+            pass
+        self._thread.join(timeout=2.0)

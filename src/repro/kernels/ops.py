@@ -1,0 +1,59 @@
+"""Jit'd dispatch wrappers for the Pallas kernels.
+
+On a real TPU the Pallas kernels run compiled; on CPU (this container) they
+run in interpret mode for correctness, and the pure-XLA reference path is used
+wherever wall-time matters (training/benchmarks). ``use_pallas()`` picks the
+default; every wrapper takes an explicit override.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .spike_matmul import spike_matmul as _spike_matmul_pallas
+from .tflif import tflif_fused as _tflif_pallas
+from .stdp_attention import stdp_attention as _stdp_pallas
+from .flash_attention import flash_attention as _flash_pallas
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def use_pallas(override: bool | None = None) -> bool:
+    if override is not None:
+        return override
+    return on_tpu()
+
+
+def spike_matmul(x_packed, w, *, mode: str = "per_plane",
+                 pallas: bool | None = None, **blocks):
+    if use_pallas(pallas):
+        return _spike_matmul_pallas(x_packed, w, mode=mode,
+                                    interpret=not on_tpu(), **blocks)
+    return ref.spike_matmul_ref(x_packed, w, mode=mode)
+
+
+def tflif_fused(x, bias=None, *, tau: float = 2.0, v_th: float = 1.0,
+                pallas: bool | None = None):
+    if use_pallas(pallas):
+        return _tflif_pallas(x, bias, tau=tau, v_th=v_th,
+                             interpret=not on_tpu())
+    return ref.tflif_ref(x, bias, tau=tau, v_th=v_th)
+
+
+def stdp_attention(q, k, v, *, scale: float, pallas: bool | None = None,
+                   **blocks):
+    if use_pallas(pallas):
+        return _stdp_pallas(q, k, v, scale=scale, interpret=not on_tpu(),
+                            **blocks)
+    return ref.stdp_attention_ref(q, k, v, scale=scale)
+
+
+def flash_attention(q, k, v, *, scale: float, causal: bool = True,
+                    pallas: bool | None = None, **blocks):
+    if use_pallas(pallas):
+        return _flash_pallas(q, k, v, scale=scale, causal=causal,
+                             interpret=not on_tpu(), **blocks)
+    return ref.flash_attention_ref(q, k, v, scale=scale, causal=causal)

@@ -1,0 +1,50 @@
+"""Pure-jnp oracles for every Pallas kernel (the ground truth for tests)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def spike_matmul_ref(x_packed, w, *, mode: str = "per_plane"):
+    """x_packed: (M, K) uint8; w: (K, N)."""
+    bits = ((x_packed[None, :, :] >> jnp.arange(8, dtype=jnp.uint8)[:, None, None])
+            & jnp.uint8(1)).astype(jnp.float32)           # (8, M, K)
+    per_plane = jnp.einsum("pmk,kn->pmn", bits, w.astype(jnp.float32))
+    if mode == "per_plane":
+        return per_plane
+    scales = (2.0 ** jnp.arange(8, dtype=jnp.float32)).reshape(8, 1, 1)
+    return (per_plane * scales).sum(axis=0)
+
+
+def tflif_ref(x, bias=None, *, tau: float = 2.0, v_th: float = 1.0):
+    """x: (T, M) -> (M,) uint8 packed spikes (bit t = timestep t)."""
+    t_steps, m = x.shape
+    if bias is None:
+        bias = jnp.zeros((m,), jnp.float32)
+    v = jnp.zeros((m,), jnp.float32)
+    packed = jnp.zeros((m,), jnp.uint8)
+    for t in range(t_steps):
+        h = v + (x[t].astype(jnp.float32) + bias - v) / tau
+        s = h >= v_th
+        v = jnp.where(s, 0.0, h)
+        packed = packed | (s.astype(jnp.uint8) << jnp.uint8(t))
+    return packed
+
+
+def stdp_attention_ref(q, k, v, *, scale: float):
+    """q, k, v: (BH, N, Dh) -> (Q Kt) V * scale."""
+    s = jnp.einsum("bnd,bmd->bnm", q.astype(jnp.float32), k.astype(jnp.float32))
+    return jnp.einsum("bnm,bmd->bnd", s, v.astype(jnp.float32)) * scale
+
+
+def flash_attention_ref(q, k, v, *, scale: float, causal: bool = True):
+    """q: (BH, Nq, Dh); k, v: (BH, Nkv, Dh). Exact softmax attention."""
+    nq, nkv = q.shape[1], k.shape[1]
+    s = jnp.einsum("bnd,bmd->bnm", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if causal:
+        qpos = (nkv - nq) + jnp.arange(nq)[:, None]
+        kpos = jnp.arange(nkv)[None, :]
+        s = jnp.where(qpos >= kpos, s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bnm,bmd->bnd", p, v.astype(jnp.float32))

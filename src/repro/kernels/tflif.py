@@ -1,0 +1,64 @@
+"""TFLIF Pallas kernel: fused (BN-folded bias add) + LIF over T timesteps,
+emitting bit-packed spikes.
+
+The T axis stays in registers (T=4 unrolled), the bias (which already carries
+the folded BN shift — "subtract the LIF threshold from the BN bias") is added
+in the same pass, and the output is written as ONE uint8 per neuron with bit t
+holding the timestep-t spike: the paper's Output-SRAM packing, which is what
+keeps inter-layer traffic at 1 bit/activation.
+
+Elementwise (VPU) kernel; grid over flattened neurons.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TAU = 2.0
+V_TH = 1.0
+
+
+def _kernel(x_ref, b_ref, o_ref, *, t_steps: int, tau: float, v_th: float):
+    """x_ref: (T, bm); b_ref: (bm,); o_ref: (bm,) uint8 packed spikes."""
+    bias = b_ref[...]
+    v = jnp.zeros_like(x_ref[0])
+    packed = jnp.zeros(x_ref.shape[1:], jnp.uint8)
+    for t in range(t_steps):  # static unroll: T lives in VREGs
+        h = v + (x_ref[t] + bias - v) / tau
+        s = (h >= v_th)
+        v = jnp.where(s, 0.0, h)
+        packed = packed | (s.astype(jnp.uint8) << jnp.uint8(t))
+    o_ref[...] = packed
+
+
+@functools.partial(jax.jit, static_argnames=("tau", "v_th", "bm", "interpret"))
+def tflif_fused(x, bias=None, *, tau: float = TAU, v_th: float = V_TH,
+                bm: int = 1024, interpret: bool = True):
+    """x: (T, M) f32 pre-activation accumulators (BN scale already folded into
+    the producing matmul); bias: (M,) BN-folded bias. Returns (M,) uint8 with
+    bit t = spike at timestep t. T must be <= 8."""
+    t_steps, m = x.shape
+    assert t_steps <= 8, t_steps
+    if bias is None:
+        bias = jnp.zeros((m,), jnp.float32)
+    bm_ = min(bm, m)
+    pad = (-m) % bm_
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad)))
+        bias = jnp.pad(bias, (0, pad))
+    mp = x.shape[1]
+    y = pl.pallas_call(
+        functools.partial(_kernel, t_steps=t_steps, tau=tau, v_th=v_th),
+        grid=(mp // bm_,),
+        in_specs=[
+            pl.BlockSpec((t_steps, bm_), lambda i: (0, i)),
+            pl.BlockSpec((bm_,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((bm_,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((mp,), jnp.uint8),
+        interpret=interpret,
+    )(x.astype(jnp.float32), bias.astype(jnp.float32))
+    return y[:m]

@@ -1,0 +1,383 @@
+"""Loop-aware cost analysis over optimized HLO text.
+
+XLA's ``compiled.cost_analysis()`` counts the body of a ``while`` loop ONCE,
+not multiplied by its trip count. Every production model here wraps its
+layers (and its gradient-accumulation microbatches) in ``lax.scan``, so the
+stock numbers undercount FLOPs / bytes / collectives by 1-3 orders of
+magnitude (e.g. qwen1.5-110b train: 80-layer scan x 8 accum steps => ~640x).
+
+This module re-derives the three roofline terms by walking the optimized HLO
+*text*, where the trip count of each loop is visible
+(``backend_config={"known_trip_count":{"n":"8"}}``) and every op carries its
+shapes. Cost model:
+
+  flops   dot: 2 * prod(out) * prod(lhs contracting dims); convolution:
+          2 * prod(out) * fan_in; elementwise arithmetic: prod(out);
+          fusion/call/while recurse (while multiplied by trip count).
+
+  bytes   HBM traffic at fusion granularity: every top-level op in a
+          computation reads its operands and writes its output once
+          (post-fusion HLO is exactly the HBM<->core schedule); pure
+          data-plumbing ops (tuple/gte/bitcast/parameter/constant) are free.
+
+  colls   per-chip payload bytes by collective kind, x loop trip counts:
+          all-gather -> output bytes; reduce-scatter/all-to-all/
+          collective-permute -> operand bytes; all-reduce -> 2x operand
+          bytes (ring reduce + broadcast phases).
+
+All shapes in SPMD-partitioned HLO are per-partition, so every number this
+module emits is PER CHIP.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from functools import lru_cache
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "fn": 1,
+    "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+    # fp8 family (f8e4m3fn etc. start with 'f8')
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute", "ragged-all-to-all")
+
+# ops that move no HBM bytes of their own
+_FREE_OPS = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "after-all", "add-dependency", "partition-id", "replica-id", "iota",
+    "rng-get-and-update-state", "opt-barrier",
+}
+
+# arithmetic ops: 1 flop per output element (transcendentals more, but noise)
+_ARITH_OPS = {
+    "add", "subtract", "multiply", "divide", "power", "maximum", "minimum",
+    "exponential", "log", "tanh", "rsqrt", "sqrt", "negate", "abs", "sign",
+    "compare", "select", "and", "or", "xor", "not", "clamp", "floor", "ceil",
+    "round-nearest-afz", "round-nearest-even", "atan2", "cosine", "sine",
+    "logistic", "exponential-minus-one", "log-plus-one", "cbrt", "erf",
+    "remainder", "shift-left", "shift-right-logical", "shift-right-arithmetic",
+    "reduce", "reduce-window", "map",
+}
+
+
+def _shape_elems_bytes(type_str: str) -> tuple[int, int]:
+    """'bf16[1,2048,128]{2,1,0}' -> (elems, bytes). Tuples sum components."""
+    type_str = type_str.strip()
+    if type_str.startswith("("):
+        total_e = total_b = 0
+        # split a tuple type on commas that are not inside brackets/braces
+        depth = 0
+        part = []
+        for ch in type_str[1:-1]:
+            if ch in "([{":
+                depth += 1
+            elif ch in ")]}":
+                depth -= 1
+            if ch == "," and depth == 0:
+                e, b = _shape_elems_bytes("".join(part))
+                total_e += e
+                total_b += b
+                part = []
+            else:
+                part.append(ch)
+        if part:
+            e, b = _shape_elems_bytes("".join(part))
+            total_e += e
+            total_b += b
+        return total_e, total_b
+    m = re.match(r"([a-z0-9]+)\[([^\]]*)\]", type_str)
+    if not m:
+        return 0, 0
+    dt, dims = m.groups()
+    n = 1
+    for d in dims.split(","):
+        d = d.strip().lstrip("<=")
+        if d:
+            n *= int(d)
+    if dt.startswith("f8"):
+        itemsize = 1
+    else:
+        itemsize = _DTYPE_BYTES.get(dt, 4)
+    return n, n * itemsize
+
+
+def _shape_dims(type_str: str) -> list[int]:
+    m = re.match(r"[a-z0-9]+\[([^\]]*)\]", type_str.strip())
+    if not m:
+        return []
+    return [int(d.strip().lstrip("<=")) for d in m.group(1).split(",") if d.strip()]
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    type_str: str
+    opcode: str
+    operands: list[str]
+    attrs: str
+    raw_args: str = ""
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    ops: list[Op]
+    # name -> type_str for every value defined in this computation (including
+    # parameters from the header)
+    types: dict
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll_bytes: dict = dataclasses.field(
+        default_factory=lambda: {k: 0.0 for k in _COLLECTIVES})
+    coll_counts: dict = dataclasses.field(
+        default_factory=lambda: {k: 0 for k in _COLLECTIVES})
+
+    def add(self, other: "Cost", mult: float = 1.0):
+        self.flops += other.flops * mult
+        self.bytes += other.bytes * mult
+        for k in _COLLECTIVES:
+            self.coll_bytes[k] += other.coll_bytes[k] * mult
+            self.coll_counts[k] += int(other.coll_counts[k] * mult)
+
+    @property
+    def collective_total(self) -> float:
+        return sum(self.coll_bytes.values())
+
+    def to_dict(self) -> dict:
+        return {
+            "flops": self.flops,
+            "hbm_bytes": self.bytes,
+            "collective_bytes": dict(self.coll_bytes),
+            "collective_counts": dict(self.coll_counts),
+            "collective_total_bytes": self.collective_total,
+        }
+
+
+_COMP_HEADER = re.compile(
+    r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\((.*)\)\s*->\s*.*\{\s*$")
+_OP_LINE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*"
+    r"((?:\([^=]*?\))|(?:[a-z0-9]+\[[^\]]*\](?:\{[^}]*\})?))\s*"
+    r"([\w\-]+)\((.*)$")
+_TRIP_COUNT = re.compile(r'known_trip_count["\s:{]+n["\s:]+"?(\d+)')
+_CALLS = re.compile(r"(?:calls|to_apply|body)=%?([\w.\-]+)")
+_COND = re.compile(r"condition=%?([\w.\-]+)")
+_BRANCHES = re.compile(r"branch_computations=\{([^}]*)\}")
+_OPERAND_REF = re.compile(r"%([\w.\-]+)")
+
+
+_COMMENT = re.compile(r"/\*.*?\*/")
+
+
+def parse_hlo(text: str) -> tuple[dict, str]:
+    """Parse HLO text into {comp_name: Computation}; return (comps, entry)."""
+    # strip /*index=N*/ comments — they contain '=' and break type parsing
+    text = _COMMENT.sub("", text)
+    comps: dict[str, Computation] = {}
+    entry = None
+    cur: Computation | None = None
+    for line in text.splitlines():
+        m = _COMP_HEADER.match(line)
+        if m and ("->" in line):
+            name, args = m.group(1), m.group(2)
+            cur = Computation(name, [], {})
+            comps[name] = cur
+            if line.lstrip().startswith("ENTRY"):
+                entry = name
+            # header params: "arg.1: f32[2,3]{1,0}, arg.2: (s32[], f32[4])"
+            for pm in re.finditer(
+                    r"([\w.\-]+)\s*:\s*((?:\([^()]*\))|(?:[a-z0-9]+\[[^\]]*\](?:\{[^}]*\})?))",
+                    args):
+                cur.types[pm.group(1)] = pm.group(2)
+            continue
+        if cur is None:
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        om = _OP_LINE.match(line)
+        if om:
+            name, type_str, opcode, rest = om.groups()
+            # split operands (up to the matching close paren) from attrs
+            depth = 1
+            for i, ch in enumerate(rest):
+                if ch == "(":
+                    depth += 1
+                elif ch == ")":
+                    depth -= 1
+                    if depth == 0:
+                        break
+            operand_str, attrs = rest[:i], rest[i + 1:]
+            operands = _OPERAND_REF.findall(operand_str)
+            cur.ops.append(Op(name, type_str, opcode, operands, attrs,
+                              raw_args=operand_str))
+            cur.types[name] = type_str
+    return comps, entry
+
+
+def _dot_flops(op: Op, comp: Computation) -> float:
+    out_elems, _ = _shape_elems_bytes(op.type_str)
+    lhs = comp.types.get(op.operands[0]) if op.operands else None
+    if lhs is None:
+        return 2.0 * out_elems  # fallback
+    dims = _shape_dims(lhs)
+    cm = re.search(r"lhs_contracting_dims=\{([^}]*)\}", op.attrs)
+    k = 1
+    if cm:
+        for d in cm.group(1).split(","):
+            d = d.strip()
+            if d:
+                k *= dims[int(d)] if int(d) < len(dims) else 1
+    return 2.0 * out_elems * k
+
+
+def _conv_flops(op: Op, comp: Computation) -> float:
+    out_elems, _ = _shape_elems_bytes(op.type_str)
+    rhs = comp.types.get(op.operands[1]) if len(op.operands) > 1 else None
+    if rhs is None:
+        return 2.0 * out_elems
+    kd = _shape_dims(rhs)
+    # kernel: spatial... x in_ch x out_ch (last dim is output feature)
+    fan_in = 1
+    for d in kd[:-1]:
+        fan_in *= d
+    return 2.0 * out_elems * fan_in
+
+
+class Analyzer:
+    def __init__(self, text: str):
+        self.comps, self.entry = parse_hlo(text)
+        self._memo: dict[str, Cost] = {}
+
+    def cost(self, comp_name: str | None = None) -> Cost:
+        comp_name = comp_name or self.entry
+        if comp_name in self._memo:
+            c = self._memo[comp_name]
+        else:
+            c = self._compute(comp_name)
+            self._memo[comp_name] = c
+        out = Cost()
+        out.add(c)
+        return out
+
+    def _operand_bytes(self, op: Op, comp: Computation) -> float:
+        total = 0.0
+        for o in op.operands:
+            t = comp.types.get(o)
+            if t is not None:
+                total += _shape_elems_bytes(t)[1]
+        return total
+
+    def _compute(self, comp_name: str) -> Cost:
+        comp = self.comps.get(comp_name)
+        cost = Cost()
+        if comp is None:
+            return cost
+        for op in comp.ops:
+            oc = op.opcode
+            out_elems, out_bytes = _shape_elems_bytes(op.type_str)
+
+            if oc == "while":
+                body = _CALLS.search(op.attrs)
+                cond = _COND.search(op.attrs)
+                tc_m = _TRIP_COUNT.search(op.attrs)
+                trip = int(tc_m.group(1)) if tc_m else self._trip_from_cond(
+                    cond.group(1) if cond else None)
+                if body:
+                    cost.add(self.cost(body.group(1)), mult=trip)
+                if cond:
+                    cost.add(self.cost(cond.group(1)), mult=trip)
+                continue
+
+            if oc == "conditional":
+                bm = _BRANCHES.search(op.attrs)
+                if bm:
+                    branches = _OPERAND_REF.findall(bm.group(1))
+                    costs = [self.cost(b) for b in branches]
+                    if costs:  # worst case branch
+                        cost.add(max(costs, key=lambda c: (c.flops, c.bytes)))
+                continue
+
+            if oc in ("call", "async-start"):
+                callee = _CALLS.search(op.attrs)
+                if callee:
+                    cost.add(self.cost(callee.group(1)))
+                continue
+
+            if oc == "fusion":
+                callee = _CALLS.search(op.attrs)
+                if callee:
+                    inner = self.cost(callee.group(1))
+                    cost.flops += inner.flops       # flops from the body
+                # bytes at the fusion boundary only (one HBM pass)
+                cost.bytes += self._operand_bytes(op, comp) + out_bytes
+                continue
+
+            base = oc.removesuffix("-start").removesuffix("-done")
+            if base in _COLLECTIVES or oc in _COLLECTIVES:
+                kind = base if base in _COLLECTIVES else oc
+                if oc.endswith("-done"):
+                    continue  # counted at -start
+                opb = self._operand_bytes(op, comp)
+                if kind == "all-gather":
+                    payload = out_bytes
+                elif kind == "all-reduce":
+                    payload = 2.0 * opb
+                else:  # reduce-scatter, all-to-all, collective-permute
+                    payload = opb
+                cost.coll_bytes[kind] += payload
+                cost.coll_counts[kind] += 1
+                cost.bytes += opb + out_bytes
+                continue
+
+            if oc in _FREE_OPS:
+                continue
+
+            # plain op: bytes in/out
+            cost.bytes += self._operand_bytes(op, comp) + out_bytes
+            if oc == "dot":
+                cost.flops += _dot_flops(op, comp)
+            elif oc == "convolution":
+                cost.flops += _conv_flops(op, comp)
+            elif oc in _ARITH_OPS:
+                if oc in ("reduce", "reduce-window", "map"):
+                    cost.flops += self._operand_bytes(op, comp) / 4.0  # ~1/elem
+                else:
+                    cost.flops += out_elems
+            # everything else (copy, transpose, reshape, gather, scatter,
+            # dynamic-slice, sort, custom-call, rng...): bytes only
+        return cost
+
+    def _trip_from_cond(self, cond_name: str | None) -> int:
+        """Fallback: largest integer 'constant(N)' literal in the condition
+        computation (jax scans compare the induction var against the length)."""
+        if cond_name is None:
+            return 1
+        comp = self.comps.get(cond_name)
+        if comp is None:
+            return 1
+        best = 1
+        for op in comp.ops:
+            if op.opcode == "constant":
+                m = re.match(r"\s*(-?\d+)\s*$", op.raw_args)
+                if m:
+                    best = max(best, int(m.group(1)))
+        return best
+
+
+def analyze(text: str) -> Cost:
+    """Full loop-aware cost of an optimized HLO module (per chip)."""
+    return Analyzer(text).cost()
+
+
+def analyze_dict(text: str) -> dict:
+    return analyze(text).to_dict()

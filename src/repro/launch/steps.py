@@ -1,0 +1,169 @@
+"""Step builders: the jit-able train / prefill / serve(decode) programs for
+any ArchConfig, plus their in/out sharding trees for a given mesh.
+
+train_step microbatches via lax.scan (gradient accumulation) so the full-
+vocab logits only ever exist for one microbatch — without this, a 4k x 256
+global batch against a 152k vocab would materialize hundreds of TB.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs.base import ArchConfig, ShapeSpec
+from ..nn import transformer as T
+from ..optim import adamw
+from ..optim.compression import ef_compress
+from ..sharding import rules
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainSettings:
+    microbatch: int = 32          # rows per accumulation step
+    compression: str = "none"     # none | int8 | topk
+    accum_dtype: str = "float32"  # grad accumulator; bf16 for the >=100B
+    # configs, where an fp32 copy of the grads (4 bytes/param/chip even under
+    # FSDP) would blow the 16 GB HBM budget
+    opt: adamw.OptConfig = dataclasses.field(default_factory=adamw.OptConfig)
+
+
+def make_train_step(cfg: ArchConfig, ts: TrainSettings, param_shardings=None):
+    opt_cfg = dataclasses.replace(
+        ts.opt, state_dtype=jnp.dtype(cfg.opt_state_dtype))
+
+    def constrain(tree):
+        if param_shardings is None:
+            return tree
+        return jax.tree_util.tree_map(
+            jax.lax.with_sharding_constraint, tree, param_shardings)
+
+    def train_step(params, opt_state, batch):
+        b = batch["tokens"].shape[0]
+        micro = min(ts.microbatch, b)
+        accum = b // micro
+
+        def mrope_split(x):  # (3, B, S) -> (accum, 3, micro, S)
+            return jnp.moveaxis(
+                x.reshape(3, accum, micro, x.shape[-1]), 1, 0)
+
+        mb = {}
+        for k, v in batch.items():
+            mb[k] = mrope_split(v) if k == "mrope_positions" else \
+                v.reshape((accum, micro) + v.shape[1:])
+
+        grad_fn = jax.value_and_grad(T.lm_loss, has_aux=True)
+
+        acc_dt = jnp.dtype(ts.accum_dtype)
+
+        def acc_step(carry, mbatch):
+            gsum, lsum = carry
+            (loss, aux), g = grad_fn(params, mbatch, cfg)
+            gsum = jax.tree_util.tree_map(
+                lambda a, b_: a + b_.astype(acc_dt), gsum, g)
+            # keep the accumulator sharded exactly like the params —
+            # otherwise SPMD replicates it onto every chip
+            return (constrain(gsum), lsum + loss), None
+
+        gzero = constrain(jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, acc_dt), params))
+        (gsum, lsum), _ = jax.lax.scan(acc_step, (gzero, 0.0), mb)
+        grads = jax.tree_util.tree_map(lambda g: g / accum, gsum)
+        loss = lsum / accum
+
+        if ts.compression != "none":
+            ef = opt_state["ef"]
+            grads, new_ef = ef_compress(grads, ef, method=ts.compression)
+        new_params, new_opt, metrics = adamw.update(
+            grads, {k: v for k, v in opt_state.items() if k != "ef"},
+            params, opt_cfg)
+        if ts.compression != "none":
+            new_opt["ef"] = new_ef
+        metrics["loss"] = loss
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+def make_prefill(cfg: ArchConfig, shape: ShapeSpec):
+    def prefill(params, batch):
+        b, s = batch["tokens"].shape
+        cache = T.init_cache(cfg, b, s)
+        batch = dict(batch, cache_pos=jnp.int32(0))
+        logits, new_cache, _ = T.model_apply(
+            params, batch, cfg, mode="prefill", cache=cache)
+        return logits, new_cache
+    return prefill
+
+
+def make_serve_step(cfg: ArchConfig):
+    def serve_step(params, cache, batch):
+        logits, new_cache, _ = T.model_apply(
+            params, batch, cfg, mode="decode", cache=cache)
+        token = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        return token, new_cache
+    return serve_step
+
+
+# ---------------------------------------------------------------------------
+# sharded jit builders
+# ---------------------------------------------------------------------------
+
+def abstract_params(cfg: ArchConfig, seed: int = 0):
+    return jax.eval_shape(
+        lambda k: T.init_model(k, cfg), jax.random.PRNGKey(seed))
+
+
+def abstract_opt_state(cfg: ArchConfig, params_shapes, ts: TrainSettings):
+    opt_cfg = dataclasses.replace(
+        ts.opt, state_dtype=jnp.dtype(cfg.opt_state_dtype))
+    st = jax.eval_shape(lambda p: adamw.init(p, opt_cfg), params_shapes)
+    if ts.compression != "none":
+        from ..optim.compression import ef_init
+        st = dict(st, ef=jax.eval_shape(ef_init, params_shapes))
+    return st
+
+
+def jit_train_step(cfg: ArchConfig, mesh, ts: TrainSettings,
+                   batch_shapes: dict):
+    p_sh = abstract_params(cfg)
+    o_sh = abstract_opt_state(cfg, p_sh, ts)
+    in_sh = (rules.param_shardings(mesh, p_sh),
+             rules.opt_state_shardings(mesh, o_sh),
+             rules.batch_shardings(mesh, batch_shapes))
+    out_sh = (in_sh[0], in_sh[1],
+              jax.tree_util.tree_map(
+                  lambda _: NamedSharding(mesh, P()),
+                  {"grad_norm": 0, "lr": 0, "loss": 0}))
+    step = jax.jit(make_train_step(cfg, ts, param_shardings=in_sh[0]),
+                   in_shardings=in_sh, out_shardings=out_sh,
+                   donate_argnums=(0, 1))
+    return step, (p_sh, o_sh, batch_shapes), in_sh
+
+
+def jit_serve_step(cfg: ArchConfig, mesh, cache_shapes, batch_shapes):
+    p_sh = abstract_params(cfg)
+    c_sh = rules.cache_shardings(mesh, cache_shapes)
+    in_sh = (rules.param_shardings(mesh, p_sh), c_sh,
+             rules.batch_shardings(mesh, batch_shapes))
+    tok_sh = rules.batch_shardings(
+        mesh, {"t": jax.ShapeDtypeStruct(
+            (batch_shapes["tokens"].shape[0],), jnp.int32)})["t"]
+    step = jax.jit(make_serve_step(cfg), in_shardings=in_sh,
+                   out_shardings=(tok_sh, c_sh), donate_argnums=(1,))
+    return step, (p_sh, cache_shapes, batch_shapes), in_sh
+
+
+def jit_prefill(cfg: ArchConfig, mesh, shape: ShapeSpec, batch_shapes):
+    p_sh = abstract_params(cfg)
+    in_sh = (rules.param_shardings(mesh, p_sh),
+             rules.batch_shardings(mesh, batch_shapes))
+    cache_shapes = jax.eval_shape(
+        lambda: T.init_cache(cfg, shape.batch, shape.seq))
+    c_sh = rules.cache_shardings(mesh, cache_shapes)
+    fn = jax.jit(make_prefill(cfg, shape), in_shardings=in_sh,
+                 out_shardings=(None, c_sh))
+    return fn, (p_sh, batch_shapes), in_sh

@@ -1,0 +1,1 @@
+from . import module, layers  # noqa: F401

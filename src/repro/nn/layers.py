@@ -1,0 +1,158 @@
+"""Common layers: Linear, Embedding, norms, rotary embeddings (RoPE + M-RoPE).
+
+Pure functions over nested-dict params (see module.py). Compute dtype is the
+caller's; params are stored in ``dtype`` chosen at init.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .module import KeyStream, lecun_normal, trunc_normal
+
+# ---------------------------------------------------------------------------
+# Linear / Embedding
+# ---------------------------------------------------------------------------
+
+def linear_init(key, d_in: int, d_out: int, *, bias: bool = False, dtype=jnp.float32,
+                std: float | None = None):
+    ks = KeyStream(key)
+    if std is None:
+        kernel = lecun_normal(ks(), (d_in, d_out), fan_in=d_in, dtype=dtype)
+    else:
+        kernel = trunc_normal(ks(), (d_in, d_out), std=std, dtype=dtype)
+    p = {"kernel": kernel}
+    if bias:
+        p["bias"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def linear(p, x, *, compute_dtype=None):
+    w = p["kernel"]
+    if compute_dtype is not None:
+        w = w.astype(compute_dtype)
+        x = x.astype(compute_dtype)
+    y = x @ w
+    if "bias" in p:
+        y = y + p["bias"].astype(y.dtype)
+    return y
+
+
+def embedding_init(key, vocab: int, d_model: int, *, dtype=jnp.float32):
+    return {"embedding": trunc_normal(key, (vocab, d_model), std=0.02, dtype=dtype)}
+
+
+def embed(p, ids, *, compute_dtype=None):
+    table = p["embedding"]
+    if compute_dtype is not None:
+        table = table.astype(compute_dtype)
+    return jnp.take(table, ids, axis=0)
+
+
+def unembed(p, x):
+    """Tied / untied LM head: logits in fp32 for a stable softmax."""
+    return x.astype(jnp.float32) @ p["embedding"].astype(jnp.float32).T
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm_init(d: int, dtype=jnp.float32):
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(p, x, *, eps: float = 1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * p["scale"].astype(jnp.float32)).astype(dt)
+
+
+def layernorm_init(d: int, dtype=jnp.float32):
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def layernorm(p, x, *, eps: float = 1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# Rotary embeddings
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, *, theta: float = 10000.0, rotary_frac: float = 1.0):
+    """Inverse frequencies for the rotated sub-dimension."""
+    rot = int(head_dim * rotary_frac) // 2 * 2
+    inv = 1.0 / (theta ** (jnp.arange(0, rot, 2, dtype=jnp.float32) / rot))
+    return inv, rot
+
+
+def apply_rope(x, positions, *, theta: float = 10000.0, rotary_frac: float = 1.0):
+    """x: (..., S, H, Dh); positions: broadcastable to (..., S)."""
+    head_dim = x.shape[-1]
+    inv, rot = rope_freqs(head_dim, theta=theta, rotary_frac=rotary_frac)
+    ang = positions[..., None].astype(jnp.float32) * inv  # (..., S, rot/2)
+    cos = jnp.cos(ang)[..., None, :]  # (..., S, 1, rot/2)
+    sin = jnp.sin(ang)[..., None, :]
+    xr, xp = x[..., :rot], x[..., rot:]
+    x1, x2 = xr[..., : rot // 2], xr[..., rot // 2:]
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    return jnp.concatenate([y1.astype(x.dtype), y2.astype(x.dtype), xp], axis=-1)
+
+
+def apply_mrope(x, positions_3d, sections: tuple[int, int, int],
+                *, theta: float = 1000000.0):
+    """Multimodal RoPE (Qwen2-VL): the head_dim/2 frequency slots are split into
+    (temporal, height, width) sections, each driven by its own position stream.
+
+    x: (..., S, H, Dh); positions_3d: (3, ..., S); sections sum to Dh//2.
+    """
+    head_dim = x.shape[-1]
+    half = head_dim // 2
+    assert sum(sections) == half, (sections, half)
+    inv = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    # pick, per frequency slot, which positional stream drives it
+    sect_id = jnp.repeat(jnp.arange(3), jnp.array(sections), total_repeat_length=half)
+    # positions_3d: (3, ..., S) -> (..., S, half): gather per-slot positions
+
+    p = jnp.moveaxis(positions_3d, 0, -1).astype(jnp.float32)  # (..., S, 3)
+    pos_per_slot = jnp.take(p, sect_id, axis=-1)  # (..., S, half)
+    ang = pos_per_slot * inv  # (..., S, half)
+    cos = jnp.cos(ang)[..., None, :]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    return jnp.concatenate([y1.astype(x.dtype), y2.astype(x.dtype)], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Misc
+# ---------------------------------------------------------------------------
+
+def swiglu(gate, up):
+    return jax.nn.silu(gate) * up
+
+
+def gelu(x):
+    return jax.nn.gelu(x, approximate=True)
+
+
+def softmax_xent(logits, labels, *, ignore_id: int = -100):
+    """Mean token cross-entropy in fp32; labels==ignore_id are masked."""
+    logits = logits.astype(jnp.float32)
+    mask = (labels != ignore_id)
+    labels_safe = jnp.where(mask, labels, 0)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels_safe[..., None], axis=-1)[..., 0]
+    nll = (logz - gold) * mask
+    return nll.sum() / jnp.maximum(mask.sum(), 1)

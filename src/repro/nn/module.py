@@ -1,0 +1,97 @@
+"""Minimal functional module system (no flax): params are nested dicts of
+jnp arrays; every layer is an ``init(key, ...) -> params`` / ``apply(params,
+x, ...) -> y`` pair. Sharding is assigned *by parameter path* (see
+``repro.sharding.rules``), so the tree layout is the single source of truth.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Iterator
+
+import jax
+import jax.numpy as jnp
+
+Params = dict  # nested dict[str, Params | jnp.ndarray]
+
+
+class KeyStream:
+    """Deterministic stream of PRNG keys: ``ks = KeyStream(key); k = ks()``."""
+
+    def __init__(self, key: jax.Array):
+        self._key = key
+
+    def __call__(self) -> jax.Array:
+        self._key, sub = jax.random.split(self._key)
+        return sub
+
+
+# ---------------------------------------------------------------------------
+# initializers
+# ---------------------------------------------------------------------------
+
+def trunc_normal(key, shape, std: float = 0.02, dtype=jnp.float32):
+    return jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32).astype(dtype) * std
+
+
+def lecun_normal(key, shape, fan_in: int | None = None, dtype=jnp.float32):
+    fan_in = fan_in if fan_in is not None else shape[0]
+    std = 1.0 / math.sqrt(max(1, fan_in))
+    return trunc_normal(key, shape, std=std, dtype=dtype)
+
+
+def zeros(shape, dtype=jnp.float32):
+    return jnp.zeros(shape, dtype)
+
+
+def ones(shape, dtype=jnp.float32):
+    return jnp.ones(shape, dtype)
+
+
+# ---------------------------------------------------------------------------
+# tree utilities
+# ---------------------------------------------------------------------------
+
+def param_count(params: Params) -> int:
+    return sum(int(x.size) for x in jax.tree_util.tree_leaves(params))
+
+
+def param_bytes(params: Params) -> int:
+    return sum(int(x.size) * x.dtype.itemsize for x in jax.tree_util.tree_leaves(params))
+
+
+def tree_paths(params: Params) -> Iterator[tuple[str, Any]]:
+    """Yield ('a/b/c', leaf) pairs for a nested-dict param tree."""
+    flat, _ = jax.tree_util.tree_flatten_with_path(params)
+    for path, leaf in flat:
+        yield "/".join(_key_str(k) for k in path), leaf
+
+
+def _key_str(k) -> str:
+    if hasattr(k, "key"):
+        return str(k.key)
+    if hasattr(k, "idx"):
+        return str(k.idx)
+    return str(k)
+
+
+def map_with_path(fn: Callable[[str, Any], Any], tree: Params) -> Params:
+    """tree_map where fn receives ('a/b/c', leaf)."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: fn("/".join(_key_str(k) for k in path), leaf), tree
+    )
+
+
+def cast_tree(tree: Params, dtype) -> Params:
+    return jax.tree_util.tree_map(
+        lambda x: x.astype(dtype) if jnp.issubdtype(x.dtype, jnp.floating) else x, tree
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class DTypes:
+    """Mixed-precision policy."""
+
+    param: Any = jnp.float32     # storage dtype of weights
+    compute: Any = jnp.bfloat16  # matmul dtype
+    accum: Any = jnp.float32     # reductions / softmax / losses

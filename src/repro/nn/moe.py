@@ -1,0 +1,108 @@
+"""Mixture-of-Experts with sort-based dispatch (no (S, E, C) one-hot).
+
+Tokens are routed top-k, then *sorted by expert id* within each group (group
+= one batch row, which is data-sharded, so the sort never crosses shards).
+Slot tables (E, C) of token indices are built from searchsorted offsets; the
+expert FFN is ONE einsum against the stacked expert weights (E is a real
+tensor dim => expert-parallel sharding is a PartitionSpec on E), and results
+scatter-add back. Capacity-dropped tokens fall through on the residual.
+
+This is the TPU-native expression of "weight stationary" for MoE: expert
+weights stay put (sharded on E over the data axis / pod axis), activations
+move through all-to-all-style collectives inserted by SPMD.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .module import KeyStream, lecun_normal
+from .layers import swiglu
+from ..sharding.hints import shard_hint
+
+
+def moe_init(key, cfg, dtype=jnp.float32):
+    ks = KeyStream(key)
+    e, d, f = cfg.n_experts, cfg.d_model, cfg.moe_d_ff
+    return {
+        "router": lecun_normal(ks(), (d, e), fan_in=d, dtype=jnp.float32),
+        "w_gate": lecun_normal(ks(), (e, d, f), fan_in=d, dtype=dtype),
+        "w_up": lecun_normal(ks(), (e, d, f), fan_in=d, dtype=dtype),
+        "w_down": lecun_normal(ks(), (e, f, d), fan_in=f, dtype=dtype),
+    }
+
+
+def capacity(tokens_per_group: int, top_k: int, n_experts: int,
+             factor: float = 1.25) -> int:
+    c = int(tokens_per_group * top_k * factor / n_experts) + 1
+    return max(1, min(c, tokens_per_group * top_k))
+
+
+def moe_apply(p, x, cfg, *, compute_dtype=jnp.bfloat16):
+    """x: (B, S, D) -> (B, S, D), plus aux losses dict.
+
+    Groups == batch rows (B is the data-sharded axis)."""
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    c = capacity(s, k, e, cfg.moe_capacity_factor)
+
+    logits = (x.astype(jnp.float32) @ p["router"])           # (B,S,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, idx = jax.lax.top_k(probs, k)                     # (B,S,K)
+    if cfg.moe_norm_topk:
+        gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+
+    # ---- sort tokens by expert id within each group -----------------------
+    flat_e = idx.reshape(b, s * k)                           # (B, S*K)
+    flat_t = jnp.broadcast_to(jnp.arange(s)[:, None], (s, k)).reshape(-1)
+    flat_t = jnp.broadcast_to(flat_t, (b, s * k))
+    flat_g = gates.reshape(b, s * k)
+    order = jnp.argsort(flat_e, axis=1, stable=True)
+    se = jnp.take_along_axis(flat_e, order, axis=1)
+    st = jnp.take_along_axis(flat_t, order, axis=1)
+    sg = jnp.take_along_axis(flat_g, order, axis=1)
+
+    # ---- slot table (E, C) -------------------------------------------------
+    eids = jnp.arange(e)
+    starts = jax.vmap(lambda a: jnp.searchsorted(a, eids, side="left"))(se)
+    ends = jax.vmap(lambda a: jnp.searchsorted(a, eids, side="right"))(se)
+    slots = starts[:, :, None] + jnp.arange(c)[None, None, :]   # (B,E,C)
+    valid = slots < ends[:, :, None]
+    slots_c = jnp.clip(slots, 0, s * k - 1).reshape(b, e * c)
+    tok = jnp.take_along_axis(st, slots_c, axis=1).reshape(b, e, c)
+    gate = jnp.take_along_axis(sg, slots_c, axis=1).reshape(b, e, c)
+    gate = jnp.where(valid, gate, 0.0)
+
+    # ---- gather -> expert FFN -> scatter ----------------------------------
+    xin = jnp.take_along_axis(
+        x, tok.reshape(b, e * c, 1), axis=1).reshape(b, e, c, d)
+    xin = (xin * valid[..., None]).astype(compute_dtype)
+    # Expert-parallel alignment for DECODE (s == 1): dispatch activations
+    # E-over-dp to MATCH the expert weights' storage sharding — tokens move
+    # (~MBs of all-to-all), weights stay put. Without this XLA all-gathers
+    # the full expert weights to every chip each step (529 GB/chip/step
+    # measured on arctic-480b decode_32k; §Perf B2). For train/prefill the
+    # token tensors outweigh the weights, so the hint stays batch-major.
+    decode_ep = s == 1
+    if decode_ep:
+        xin = shard_hint(xin, None, "dp", None, "model")
+    h = swiglu(
+        jnp.einsum("becd,edf->becf", xin, p["w_gate"].astype(compute_dtype)),
+        jnp.einsum("becd,edf->becf", xin, p["w_up"].astype(compute_dtype)))
+    if decode_ep:
+        h = shard_hint(h, None, "dp", None, "model")
+    out = jnp.einsum("becf,efd->becd", h, p["w_down"].astype(compute_dtype))
+    out = out * gate[..., None].astype(compute_dtype)
+    if decode_ep:
+        out = shard_hint(out, "dp", None, None, None)
+
+    y = jnp.zeros((b, s, d), compute_dtype)
+    y = y.at[jnp.arange(b)[:, None], tok.reshape(b, e * c)].add(
+        out.reshape(b, e * c, d))
+
+    # ---- aux: load-balancing loss (Switch style) ---------------------------
+    me = probs.mean(axis=(0, 1))                              # (E,)
+    ce = jax.nn.one_hot(idx[..., 0], e).mean(axis=(0, 1))
+    aux = {"load_balance": e * jnp.sum(me * ce),
+           "router_z": jnp.mean(jax.nn.logsumexp(logits, -1) ** 2)}
+    return y.astype(x.dtype), aux

@@ -1,0 +1,193 @@
+"""Mamba2 (SSD — state-space duality) block: chunked train/prefill form and
+O(1)-state recurrent decode. Used by mamba2-130m and the SSM branch of Hymba.
+
+Train/prefill follows the SSD block decomposition (Dao & Gu 2024, Listing 1):
+the sequence is split into chunks; within a chunk the computation is an
+attention-like quadratic form, and states are passed between chunks through
+an exponential-decay recurrence (a lax.scan). This is the sub-quadratic path
+that makes `long_500k` feasible where full attention is skipped.
+
+Decode keeps a constant-size state (B, H, P, N) + a (k-1)-deep conv buffer —
+the SSM analogue of VESTA's TFLIF: temporal state fused on-chip, nothing
+quadratic ever materializes.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .module import KeyStream, lecun_normal
+from .layers import rmsnorm_init, rmsnorm
+from ..sharding.hints import shard_hint
+
+
+def ssm_dims(cfg):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    heads = d_inner // cfg.ssm_head_dim
+    conv_dim = d_inner + 2 * cfg.ssm_groups * cfg.ssm_state
+    return d_inner, heads, conv_dim
+
+
+def ssm_init(key, cfg, dtype=jnp.float32):
+    ks = KeyStream(key)
+    d = cfg.d_model
+    d_inner, heads, conv_dim = ssm_dims(cfg)
+    g, n = cfg.ssm_groups, cfg.ssm_state
+    return {
+        # order: [z (d_inner), x (d_inner), B (g*n), C (g*n), dt (heads)]
+        "in_proj": lecun_normal(ks(), (d, 2 * d_inner + 2 * g * n + heads),
+                                fan_in=d, dtype=dtype),
+        "conv_w": lecun_normal(ks(), (cfg.ssm_conv, conv_dim), fan_in=cfg.ssm_conv,
+                               dtype=dtype),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "a_log": jnp.log(jnp.arange(1, heads + 1, dtype=jnp.float32)),
+        "dt_bias": jnp.zeros((heads,), jnp.float32),
+        "d_skip": jnp.ones((heads,), jnp.float32),
+        "norm": rmsnorm_init(d_inner, dtype),
+        "out_proj": lecun_normal(ks(), (d_inner, d), fan_in=d_inner, dtype=dtype),
+    }
+
+
+def _split_proj(cfg, zxbcdt):
+    d_inner, heads, _ = ssm_dims(cfg)
+    g, n = cfg.ssm_groups, cfg.ssm_state
+    z, xbc, dt = jnp.split(zxbcdt, [d_inner, 2 * d_inner + 2 * g * n], axis=-1)
+    return z, xbc, dt
+
+
+def _causal_conv(xbc, w, b):
+    """Depthwise causal conv, window k: explicit shift-mac (k is tiny)."""
+    k = w.shape[0]
+    y = xbc * w[k - 1]
+    for i in range(1, k):
+        shifted = jnp.pad(xbc, ((0, 0), (i, 0), (0, 0)))[:, :-i, :]
+        y = y + shifted * w[k - 1 - i]
+    return jax.nn.silu(y + b)
+
+
+def _segsum(a):
+    """a: (..., Q) -> (..., Q, Q) lower-tri cumulative sums: L[i,j]=sum a[j+1..i]."""
+    q = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((q, q), bool), 0)
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(x, dt, a, b_mat, c_mat, *, chunk: int, init_state=None):
+    """SSD forward. x: (B,S,H,P); dt: (B,S,H); a: (H,) (negative);
+    b_mat/c_mat: (B,S,G,N). Returns (y (B,S,H,P), final_state (B,H,P,N))."""
+    bsz, s, h, p_dim = x.shape
+    g, n = b_mat.shape[2], b_mat.shape[3]
+    assert s % chunk == 0, (s, chunk)
+    nc = s // chunk
+    rep = h // g
+
+    # chunk views; broadcast SSM groups to heads up front (g | h)
+    xc = x.reshape(bsz, nc, chunk, h, p_dim)
+    dtc = dt.reshape(bsz, nc, chunk, h)
+    bh = jnp.repeat(b_mat.reshape(bsz, nc, chunk, g, n), rep, axis=3)
+    ch = jnp.repeat(c_mat.reshape(bsz, nc, chunk, g, n), rep, axis=3)
+    da = dtc * a  # (B,nc,Q,H)  per-step log-decay
+    da_cum = jnp.cumsum(da, axis=2)                        # within-chunk cumsum
+    da_total = da_cum[:, :, -1]                            # (B,nc,H)
+
+    # ---- intra-chunk (diagonal blocks): attention-like quadratic ----------
+    lmat = jnp.exp(_segsum(da.transpose(0, 1, 3, 2)))      # (B,nc,H,Q,Q)
+    cb = jnp.einsum("bcqhn,bckhn->bchqk", ch, bh)          # (B,nc,H,Q,Q)
+    scores = cb * lmat
+    y_diag = jnp.einsum("bchqk,bckh,bckhp->bcqhp", scores, dtc, xc)
+
+    # ---- per-chunk emitted states ------------------------------------------
+    decay_states = jnp.exp(da_total[:, :, None, :] - da_cum)   # (B,nc,Q,H)
+    states = jnp.einsum("bcqhn,bcqh,bcqh,bcqhp->bchpn",
+                        bh, decay_states, dtc, xc)
+
+    # ---- inter-chunk recurrence (scan over chunks) -------------------------
+    s0 = (jnp.zeros((bsz, h, p_dim, n), jnp.float32) if init_state is None
+          else init_state.astype(jnp.float32))
+
+    def step(prev, inp):
+        st, dtot = inp                                     # (B,H,P,N), (B,H)
+        new = st + prev * jnp.exp(dtot)[:, :, None, None]
+        return new, prev                                   # emit state BEFORE chunk
+
+    final_state, prev_states = jax.lax.scan(
+        step, s0, (jnp.moveaxis(states, 1, 0), jnp.moveaxis(da_total, 1, 0)))
+    prev_states = jnp.moveaxis(prev_states, 0, 1)          # (B,nc,H,P,N)
+
+    # contribution of carried-in states
+    state_decay = jnp.exp(da_cum)                          # (B,nc,Q,H)
+    y_off = jnp.einsum("bcqhn,bchpn,bcqh->bcqhp",
+                       ch, prev_states, state_decay)
+
+    y = (y_diag + y_off).reshape(bsz, s, h, p_dim)
+    return y, final_state
+
+
+def ssm_apply(p, x, cfg, *, state=None, conv_state=None, decode: bool = False,
+              chunk: int = 128, compute_dtype=jnp.bfloat16):
+    """x: (B,S,D). Returns (y (B,S,D), new_state, new_conv_state)."""
+    bsz, s, d = x.shape
+    d_inner, heads, conv_dim = ssm_dims(cfg)
+    g, n = cfg.ssm_groups, cfg.ssm_state
+    p_dim = cfg.ssm_head_dim
+
+    zxbcdt = x.astype(compute_dtype) @ p["in_proj"].astype(compute_dtype)
+    if cfg.family == "hybrid":
+        # pin batch to dp: without this hymba's SSD chunk intermediates
+        # (B, nc, Q, H, ...) replicate onto every chip (29.6 GB/chip before
+        # the hint). Pure-SSM mamba2 REGRESSED 0.7x under the same hint
+        # (forced resharding against its natural propagation) — hybrid only.
+        zxbcdt = shard_hint(zxbcdt, "dp", None, "model")
+    z, xbc, dt = _split_proj(cfg, zxbcdt)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])   # (B,S,H)
+    a = -jnp.exp(p["a_log"])                                       # (H,)
+
+    if decode:
+        # conv ring: conv_state (B, k-1, conv_dim) holds the last k-1 inputs
+        window = jnp.concatenate([conv_state, xbc.astype(jnp.float32)], axis=1)
+        w = p["conv_w"].astype(jnp.float32)
+        conv_out = jax.nn.silu(jnp.einsum("bkc,kc->bc", window, w) + p["conv_b"])
+        new_conv_state = window[:, 1:, :]
+        xin = conv_out[:, None, :]                                 # (B,1,conv)
+    else:
+        xin = _causal_conv(xbc.astype(jnp.float32), p["conv_w"].astype(jnp.float32),
+                           p["conv_b"].astype(jnp.float32))
+        new_conv_state = xbc.astype(jnp.float32)[:, -(cfg.ssm_conv - 1):, :]
+
+    xs, bmat, cmat = jnp.split(xin, [d_inner, d_inner + g * n], axis=-1)
+    xs = xs.reshape(bsz, -1, heads, p_dim)
+    bmat = bmat.reshape(bsz, -1, g, n)
+    cmat = cmat.reshape(bsz, -1, g, n)
+
+    if decode:
+        # recurrent update: state' = exp(dt*a) state + dt * B x
+        dt1 = dt[:, 0]                                             # (B,H)
+        da = jnp.exp(dt1 * a)                                      # (B,H)
+        bx = jnp.einsum("bgn,bhp->bhpn", bmat[:, 0], xs[:, 0] * dt1[..., None])
+        new_state = state * da[:, :, None, None] + bx
+        y = jnp.einsum("bgn,bhpn->bhp", cmat[:, 0], new_state)
+        y = y[:, None]                                             # (B,1,H,P)
+    else:
+        pad = (-s) % chunk
+        if pad:
+            xs = jnp.pad(xs, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+            bmat = jnp.pad(bmat, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            cmat = jnp.pad(cmat, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        y, new_state = ssd_chunked(xs, dt, a, bmat, cmat, chunk=chunk,
+                                   init_state=state)
+        y = y[:, :s]
+
+    y = y + xs[:, :s] * p["d_skip"][:, None]                       # D skip
+    y = y.reshape(bsz, s, d_inner)
+    y = rmsnorm(p["norm"], (y * jax.nn.silu(z.astype(jnp.float32))).astype(compute_dtype))
+    out = y @ p["out_proj"].astype(compute_dtype)
+    return out.astype(x.dtype), new_state, new_conv_state
+
+
+def init_ssm_state(batch: int, cfg, dtype=jnp.float32):
+    d_inner, heads, conv_dim = ssm_dims(cfg)
+    return (jnp.zeros((batch, heads, cfg.ssm_head_dim, cfg.ssm_state), dtype),
+            jnp.zeros((batch, cfg.ssm_conv - 1, conv_dim), dtype))

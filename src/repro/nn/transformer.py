@@ -1,0 +1,377 @@
+"""Generic LM backbone assembled from an ArchConfig.
+
+One scan-able layer body covers the dense / MoE / VLM / enc-dec families
+(uniform per-layer structure => layers are stacked and driven by lax.scan for
+small HLO and fast compiles at 80 layers). The SSM and hybrid families unroll
+in Python because their per-layer caches are heterogeneous (Hymba's three
+global-attention layers carry full-length KV caches; sliding-window layers
+carry ring buffers).
+
+Modes:
+  train   — teacher-forced CE loss path (remat per layer).
+  prefill — forward + cache build, returns logits of the last position.
+  decode  — one token against the cache (the `serve_step` the decode_* and
+            long_* dry-run shapes lower).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .module import KeyStream
+from .layers import (linear_init, linear, embedding_init, embed, unembed,
+                     rmsnorm_init, rmsnorm, layernorm_init, layernorm,
+                     swiglu, gelu, softmax_xent)
+from .attention import attn_init, attn_apply, init_kv_cache
+from ..sharding.hints import shard_hint
+from .moe import moe_init, moe_apply
+from .ssm import ssm_init, ssm_apply, init_ssm_state
+
+# ---------------------------------------------------------------------------
+# norms / mlp helpers
+# ---------------------------------------------------------------------------
+
+def _norm_init(cfg, d=None):
+    d = d or cfg.d_model
+    return rmsnorm_init(d) if cfg.norm == "rmsnorm" else layernorm_init(d)
+
+
+def _norm(cfg, p, x):
+    return rmsnorm(p, x) if cfg.norm == "rmsnorm" else layernorm(p, x)
+
+
+def mlp_init(key, cfg, dtype=jnp.float32):
+    ks = KeyStream(key)
+    d, f = cfg.d_model, cfg.d_ff
+    if cfg.act == "swiglu":
+        return {"gate": linear_init(ks(), d, f, dtype=dtype),
+                "up": linear_init(ks(), d, f, dtype=dtype),
+                "down": linear_init(ks(), f, d, dtype=dtype)}
+    return {"up": linear_init(ks(), d, f, bias=True, dtype=dtype),
+            "down": linear_init(ks(), f, d, bias=True, dtype=dtype)}
+
+
+def mlp_apply(p, x, cfg, *, compute_dtype):
+    if cfg.act == "swiglu":
+        h = swiglu(linear(p["gate"], x, compute_dtype=compute_dtype),
+                   linear(p["up"], x, compute_dtype=compute_dtype))
+    else:
+        h = gelu(linear(p["up"], x, compute_dtype=compute_dtype))
+    # Megatron TP: the hidden F dim lives on the model axis (weights stay
+    # sharded; the S-sharded input is all-gathered, the down-proj emits
+    # partials that reduce-scatter back to the S-sharded layout).
+    h = shard_hint(h, "dp", None, "model")
+    return linear(p["down"], h, compute_dtype=compute_dtype)
+
+
+# ---------------------------------------------------------------------------
+# one decoder layer
+# ---------------------------------------------------------------------------
+
+def layer_init(key, cfg, dtype=jnp.float32):
+    ks = KeyStream(key)
+    p = {"ln1": _norm_init(cfg)}
+    if cfg.family != "ssm":
+        p["attn"] = attn_init(ks(), cfg, dtype)
+    if cfg.family in ("ssm", "hybrid"):
+        p["ssm"] = ssm_init(ks(), cfg, dtype)
+    if cfg.family == "hybrid":
+        p["attn_out_norm"] = _norm_init(cfg)
+        p["ssm_out_norm"] = _norm_init(cfg)
+    if cfg.family != "ssm":
+        p["ln2"] = _norm_init(cfg)
+        if cfg.n_experts > 0:
+            p["moe"] = moe_init(ks(), cfg, dtype)
+            if cfg.dense_parallel:
+                p["mlp"] = mlp_init(ks(), cfg, dtype)
+        elif cfg.d_ff > 0:
+            p["mlp"] = mlp_init(ks(), cfg, dtype)
+    if cfg.cross_attention:
+        p["cross"] = attn_init(ks(), cfg, dtype)
+        p["ln_cross"] = _norm_init(cfg)
+    return p
+
+
+def layer_apply(p, x, cfg, *, positions, cache=None, cache_pos=None,
+                flags=None, mrope_positions=None, enc_out=None,
+                compute_dtype=jnp.bfloat16):
+    """Returns (x, new_cache, aux). cache is a per-layer dict or None."""
+    aux = {}
+    new_cache = dict(cache) if cache is not None else None
+    h = _norm(cfg, p["ln1"], x)
+
+    if cfg.family == "ssm":
+        y, st, cv = ssm_apply(
+            p["ssm"], h, cfg, state=None if cache is None else cache["ssm"],
+            conv_state=None if cache is None else cache["conv"],
+            decode=cache is not None and h.shape[1] == 1,
+            compute_dtype=compute_dtype)
+        if new_cache is not None:
+            new_cache["ssm"], new_cache["conv"] = st, cv
+        x = x + y
+    else:
+        window = None
+        is_global = None
+        if cfg.sliding_window is not None and flags is not None:
+            window = cfg.sliding_window
+            is_global = flags.get("is_global")
+        mixer_out, kv = attn_apply(
+            p["attn"], h, cfg, positions=positions,
+            cache=None if cache is None else cache.get("kv"),
+            cache_pos=cache_pos, mrope_positions=mrope_positions,
+            window=window, is_global=is_global,
+            compute_dtype=compute_dtype, chunk=cfg.attn_chunk)
+        if new_cache is not None and kv is not None:
+            new_cache["kv"] = kv
+        if cfg.family == "hybrid":
+            s_out, st, cv = ssm_apply(
+                p["ssm"], h, cfg,
+                state=None if cache is None else cache["ssm"],
+                conv_state=None if cache is None else cache["conv"],
+                decode=cache is not None and h.shape[1] == 1,
+                compute_dtype=compute_dtype)
+            if new_cache is not None:
+                new_cache["ssm"], new_cache["conv"] = st, cv
+            mixer_out = 0.5 * (_norm(cfg, p["attn_out_norm"], mixer_out)
+                               + _norm(cfg, p["ssm_out_norm"], s_out))
+        x = x + mixer_out
+
+    if cfg.cross_attention:
+        cross_kv = None
+        if enc_out is not None:
+            # project the encoder output with this layer's cross k/v weights
+            b_, se, _ = enc_out.shape
+            dh = cfg.head_dim
+            ck = linear(p["cross"]["wk"], enc_out, compute_dtype=compute_dtype)
+            cv = linear(p["cross"]["wv"], enc_out, compute_dtype=compute_dtype)
+            ck = ck.reshape(b_, se, cfg.n_kv_heads, dh).transpose(0, 2, 1, 3)
+            cv = cv.reshape(b_, se, cfg.n_kv_heads, dh).transpose(0, 2, 1, 3)
+            cross_kv = {"k": ck, "v": cv}
+            if new_cache is not None and "cross_k" in new_cache:
+                new_cache["cross_k"] = ck.astype(new_cache["cross_k"].dtype)
+                new_cache["cross_v"] = cv.astype(new_cache["cross_v"].dtype)
+        elif cache is not None and "cross_k" in cache:
+            cross_kv = {"k": cache["cross_k"], "v": cache["cross_v"]}
+        if cross_kv is not None:
+            hc = _norm(cfg, p["ln_cross"], x)
+            cross_out, _ = attn_apply(
+                p["cross"], hc, cfg, positions=positions, cross_kv=cross_kv,
+                compute_dtype=compute_dtype, chunk=cfg.attn_chunk)
+            x = x + cross_out
+
+    if cfg.family != "ssm" and (cfg.d_ff > 0 or cfg.n_experts > 0):
+        h2 = _norm(cfg, p["ln2"], x)
+        y = 0.0
+        if cfg.n_experts > 0:
+            moe_out, moe_aux = moe_apply(p["moe"], h2, cfg,
+                                         compute_dtype=compute_dtype)
+            y = y + moe_out
+            aux.update(moe_aux)
+            if cfg.dense_parallel:
+                y = y + mlp_apply(p["mlp"], h2, cfg, compute_dtype=compute_dtype)
+        else:
+            y = mlp_apply(p["mlp"], h2, cfg, compute_dtype=compute_dtype)
+        x = x + y
+    # Megatron-SP layout between layers: sequence sharded over the model axis
+    # (keeps the scan's saved carry stack — L x (B,S,D) — 16x smaller per chip;
+    # norms are per-token so they run sharded). Falls back to replicated S for
+    # decode (S=1) via the divisibility guard.
+    x = shard_hint(x, "dp", "model", None)
+    return x, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# whole model
+# ---------------------------------------------------------------------------
+
+def _stack(trees):
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def init_model(key, cfg):
+    dtype = jnp.dtype(cfg.param_dtype)
+    ks = KeyStream(key)
+    p = {"embed": embedding_init(ks(), cfg.padded_vocab, cfg.d_model, dtype=dtype),
+         "final_norm": _norm_init(cfg)}
+    p["layers"] = _stack([layer_init(ks(), cfg, dtype) for _ in range(cfg.n_layers)])
+    if not cfg.tie_embeddings:
+        p["head"] = linear_init(ks(), cfg.d_model, cfg.padded_vocab, dtype=dtype)
+    if cfg.family == "encdec":
+        enc_cfg = cfg.encoder_cfg()
+        p["enc_layers"] = _stack(
+            [layer_init(ks(), enc_cfg, dtype) for _ in range(cfg.encoder_layers)])
+        p["enc_norm"] = _norm_init(cfg)
+    return p
+
+
+def _sinusoidal(positions, d):
+    """(B,S) -> (B,S,D) sinusoidal embeddings (whisper-style backbone stub)."""
+    half = d // 2
+    freqs = jnp.exp(-jnp.log(10000.0) * jnp.arange(half) / max(half - 1, 1))
+    ang = positions[..., None].astype(jnp.float32) * freqs
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def layer_flags(cfg):
+    """Per-layer traced flags (stacked for scan): Hymba global-attn layers."""
+    if cfg.sliding_window is None:
+        return None
+    glob = jnp.zeros((cfg.n_layers,), bool)
+    for i in cfg.global_layers:
+        glob = glob.at[i].set(True)
+    return {"is_global": glob}
+
+
+def encode(params, frames, cfg, *, compute_dtype=jnp.bfloat16):
+    """Whisper encoder over precomputed frame embeddings (frontend stubbed)."""
+    enc_cfg = cfg.encoder_cfg()
+    b, s, _ = frames.shape
+    x = frames.astype(compute_dtype) + _sinusoidal(
+        jnp.broadcast_to(jnp.arange(s), (b, s)), cfg.d_model).astype(compute_dtype)
+
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+
+    def body(x, lp):
+        y, _, _ = layer_apply(lp, x, enc_cfg, positions=positions,
+                              compute_dtype=compute_dtype)
+        return y, None
+
+    if cfg.scan_layers:
+        x, _ = jax.lax.scan(body, x, params["enc_layers"])
+    else:
+        for i in range(cfg.encoder_layers):
+            lp = jax.tree_util.tree_map(lambda t: t[i], params["enc_layers"])
+            x, _ = body(x, lp)
+    return _norm(cfg, params["enc_norm"], x)
+
+
+def model_apply(params, batch, cfg, *, mode: str = "train", cache=None,
+                compute_dtype=None):
+    """Returns (logits, new_cache, aux)."""
+    compute_dtype = compute_dtype or jnp.dtype(cfg.compute_dtype)
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    x = embed(params["embed"], tokens, compute_dtype=compute_dtype)
+    x = shard_hint(x, "dp", "model", None)
+
+    if cfg.family == "vlm" and "image_embeds" in batch:
+        img = batch["image_embeds"].astype(compute_dtype)
+        x = jax.lax.dynamic_update_slice(x, img, (0, 0, 0))
+    mrope_positions = batch.get("mrope_positions")
+
+    cache_pos = batch.get("cache_pos")
+    if cache_pos is None:
+        cache_pos = jnp.int32(0)
+    cache_pos = jnp.asarray(cache_pos, jnp.int32)
+    _cp = cache_pos[:, None] if cache_pos.ndim == 1 else cache_pos
+    positions = _cp + jnp.broadcast_to(jnp.arange(s), (b, s))
+
+    enc_out = None
+    if cfg.family == "encdec" and mode != "decode":
+        enc_out = encode(params, batch["frames"], cfg,
+                         compute_dtype=compute_dtype)
+        x = x + _sinusoidal(positions, cfg.d_model).astype(compute_dtype)
+    elif cfg.family == "encdec":
+        x = x + _sinusoidal(positions, cfg.d_model).astype(compute_dtype)
+
+    flags = layer_flags(cfg)
+    aux_total = {}
+
+    if cfg.scan_layers:
+        def body(carry, xs):
+            x = carry
+            y, new_c, aux = layer_apply(
+                xs["p"], x, cfg, positions=positions, cache=xs.get("cache"),
+                cache_pos=cache_pos, flags=xs.get("flags"),
+                mrope_positions=mrope_positions, enc_out=enc_out,
+                compute_dtype=compute_dtype)
+            return y, (new_c, aux)
+
+        if mode == "train" and cfg.remat:
+            policy = (jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+                      if cfg.remat_policy == "dots"
+                      else jax.checkpoint_policies.nothing_saveable)
+            body = jax.checkpoint(body, policy=policy)
+        xs = {"p": params["layers"]}
+        if cache is not None:
+            xs["cache"] = cache
+        if flags is not None:
+            xs["flags"] = flags
+        x, (new_cache, auxes) = jax.lax.scan(body, x, xs)
+        aux_total = jax.tree_util.tree_map(lambda a: a.mean(), auxes)
+    else:
+        def run_layer(lp, x, lcache, lflags):
+            return layer_apply(lp, x, cfg, positions=positions, cache=lcache,
+                               cache_pos=cache_pos, flags=lflags,
+                               mrope_positions=mrope_positions,
+                               enc_out=enc_out, compute_dtype=compute_dtype)
+
+        if mode == "train" and cfg.remat:
+            run_layer = jax.checkpoint(
+                run_layer, policy=jax.checkpoint_policies.nothing_saveable)
+        new_caches = []
+        for i in range(cfg.n_layers):
+            lp = jax.tree_util.tree_map(lambda t: t[i], params["layers"])
+            lcache = None if cache is None else cache[i]
+            lflags = None if flags is None else \
+                jax.tree_util.tree_map(lambda t: t[i], flags)
+            x, new_c, aux = run_layer(lp, x, lcache, lflags)
+            new_caches.append(new_c)
+            for k, v in aux.items():
+                aux_total[k] = aux_total.get(k, 0.0) + v / cfg.n_layers
+        new_cache = new_caches if cache is not None else None
+
+    x = _norm(cfg, params["final_norm"], x)
+    if mode in ("prefill", "decode"):
+        x = x[:, -1:, :]
+    if cfg.tie_embeddings:
+        logits = unembed(params["embed"], x)
+    else:
+        logits = linear(params["head"], x, compute_dtype=jnp.float32)
+    logits = shard_hint(logits, "dp", None, "model")
+    return logits, new_cache, aux_total
+
+
+# ---------------------------------------------------------------------------
+# caches
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg, batch: int, length: int, dtype=jnp.bfloat16):
+    """Build the (stacked or per-layer list) decode cache for an arch."""
+    def one_layer(i):
+        c = {}
+        if cfg.family != "ssm":
+            win = cfg.sliding_window
+            glob = i in cfg.global_layers if win is not None else True
+            clen = length if (win is None or glob) else min(win, length)
+            c["kv"] = init_kv_cache(batch, cfg.n_kv_heads, clen,
+                                    cfg.head_dim, dtype)
+        if cfg.family in ("ssm", "hybrid"):
+            st, cv = init_ssm_state(batch, cfg)
+            c["ssm"], c["conv"] = st, cv
+        if cfg.cross_attention:
+            c["cross_k"] = jnp.zeros((batch, cfg.n_kv_heads, cfg.n_frames,
+                                      cfg.head_dim), dtype)
+            c["cross_v"] = jnp.zeros((batch, cfg.n_kv_heads, cfg.n_frames,
+                                      cfg.head_dim), dtype)
+        return c
+
+    if cfg.scan_layers:
+        return _stack([one_layer(i) for i in range(cfg.n_layers)])
+    return [one_layer(i) for i in range(cfg.n_layers)]
+
+
+# ---------------------------------------------------------------------------
+# loss
+# ---------------------------------------------------------------------------
+
+def lm_loss(params, batch, cfg):
+    logits, _, aux = model_apply(params, batch, cfg, mode="train")
+    loss = softmax_xent(logits, batch["labels"])
+    if aux:
+        loss = loss + 0.01 * aux.get("load_balance", 0.0) \
+                    + 0.001 * aux.get("router_z", 0.0)
+    return loss, aux

@@ -1,0 +1,59 @@
+"""Gradient compression with error feedback.
+
+Two layers:
+  1. Numerics (works under jit-SPMD): ``ef_compress`` quantizes gradients to
+     int8 (or top-k sparsifies) with an error-feedback accumulator, modelling
+     exactly what a compressed cross-pod reduction delivers to the optimizer.
+  2. Transport (shard_map): ``compressed_psum_int8`` — the actual collective
+     a multi-pod deployment runs across the DCN boundary: int8 payload +
+     fp32 scale all-gather, local dequant+mean. 4x fewer bytes on the wire
+     than an fp32 all-reduce; HLO collective bytes drop accordingly (see
+     benchmarks/compression_bench.py).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ef_init(params):
+    return jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def ef_compress(grads, ef, *, method: str = "int8", topk_frac: float = 0.01):
+    """Quantize/sparsify grads with error feedback. Returns (grads', ef')."""
+    def one(g, e):
+        g32 = g.astype(jnp.float32) + e
+        if method == "int8":
+            scale = jnp.maximum(jnp.max(jnp.abs(g32)), 1e-12) / 127.0
+            q = jnp.clip(jnp.round(g32 / scale), -127, 127)
+            deq = q * scale
+        elif method == "topk":
+            k = max(1, int(g32.size * topk_frac))
+            flat = g32.reshape(-1)
+            thresh = jax.lax.top_k(jnp.abs(flat), k)[0][-1]
+            deq = jnp.where(jnp.abs(flat) >= thresh, flat, 0.0).reshape(g32.shape)
+        else:
+            raise ValueError(method)
+        return deq, g32 - deq
+
+    out = jax.tree_util.tree_map(one, grads, ef)
+    deq = jax.tree_util.tree_map(lambda t: t[0], out,
+                                 is_leaf=lambda t: isinstance(t, tuple))
+    new_ef = jax.tree_util.tree_map(lambda t: t[1], out,
+                                    is_leaf=lambda t: isinstance(t, tuple))
+    return deq, new_ef
+
+
+def compressed_psum_int8(x, axis_name: str):
+    """shard_map collective: mean of `x` across `axis_name` with an int8
+    payload (the cross-pod DCN reduction of a 1000-node deployment)."""
+    scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    n = jax.lax.psum(1, axis_name)
+    qs = jax.lax.all_gather(q, axis_name)                # int8 on the wire
+    scales = jax.lax.all_gather(scale, axis_name)        # fp32 scalars
+    deq = (qs.astype(jnp.float32)
+           * scales.reshape((-1,) + (1,) * x.ndim))
+    return deq.sum(axis=0) / n

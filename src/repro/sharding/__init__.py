@@ -1,0 +1,1 @@
+"""Sharding: path-based parameter rules + activation hints."""

@@ -1,0 +1,153 @@
+"""Per-assigned-architecture smoke tests: a REDUCED config of the same family
+runs one forward + one train step on CPU; output shapes are right and finite.
+Also: decode == prefill parity per family, and full-config invariants
+(exact dims from the brief)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ARCH_IDS, SHAPES, get_config, cell_applicable
+from repro.nn import transformer as T
+
+FULL_DIMS = {  # (layers, d_model, heads, kv, d_ff, vocab) from the brief
+    "stablelm-12b": (40, 5120, 32, 8, 13824, 100352),
+    "glm4-9b": (40, 4096, 32, 2, 13696, 151552),
+    "qwen1.5-110b": (80, 8192, 64, 8, 49152, 152064),
+    "smollm-360m": (32, 960, 15, 5, 2560, 49152),
+    "hymba-1.5b": (32, 1600, 25, 5, 5504, 32001),
+    "whisper-large-v3": (32, 1280, 20, 20, 5120, 51866),
+    "mamba2-130m": (24, 768, 0, 0, 0, 50280),
+    "arctic-480b": (35, 7168, 56, 8, 4864, 32000),
+    "qwen3-moe-30b-a3b": (48, 2048, 32, 4, 0, 151936),
+    "qwen2-vl-7b": (28, 3584, 28, 4, 18944, 152064),
+}
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_full_config_matches_brief(arch):
+    cfg = get_config(arch)
+    ly, d, h, kv, ff, v = FULL_DIMS[arch]
+    assert cfg.n_layers == ly and cfg.d_model == d
+    assert cfg.n_heads == h and cfg.n_kv_heads == kv
+    assert cfg.d_ff == ff and cfg.vocab == v
+
+
+def test_param_counts_in_band():
+    """Analytic parameter counts should be near the advertised sizes."""
+    bands = {"smollm-360m": (0.3e9, 0.5e9), "mamba2-130m": (0.1e9, 0.2e9),
+             "glm4-9b": (8e9, 11e9), "stablelm-12b": (10e9, 14e9),
+             "qwen1.5-110b": (95e9, 125e9), "arctic-480b": (380e9, 520e9),
+             "qwen3-moe-30b-a3b": (25e9, 36e9), "qwen2-vl-7b": (6e9, 9e9),
+             "hymba-1.5b": (1.2e9, 2.2e9), "whisper-large-v3": (1.2e9, 2.2e9)}
+    for arch, (lo, hi) in bands.items():
+        n = get_config(arch).n_params()
+        assert lo <= n <= hi, f"{arch}: {n/1e9:.2f}B not in [{lo/1e9},{hi/1e9}]"
+
+
+def _smoke_batch(cfg, b=2, s=16):
+    key = jax.random.PRNGKey(0)
+    batch = {
+        "tokens": jax.random.randint(key, (b, s), 0, cfg.vocab),
+        "labels": jax.random.randint(key, (b, s), 0, cfg.vocab),
+    }
+    if cfg.family == "vlm":
+        batch["image_embeds"] = jnp.zeros((b, cfg.img_tokens, cfg.d_model),
+                                          jnp.bfloat16)
+        pos = jnp.broadcast_to(jnp.arange(s), (b, s))
+        batch["mrope_positions"] = jnp.broadcast_to(pos[None], (3, b, s))
+    if cfg.family == "encdec":
+        batch["frames"] = jax.random.normal(
+            key, (b, cfg.n_frames, cfg.d_model), jnp.bfloat16)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_reduced_forward_and_train_step(arch):
+    cfg = get_config(arch).reduced()
+    params = T.init_model(jax.random.PRNGKey(0), cfg)
+    batch = _smoke_batch(cfg)
+    logits, _, _ = T.model_apply(params, batch, cfg, mode="train")
+    assert logits.shape == (2, 16, cfg.padded_vocab)
+    assert bool(jnp.isfinite(logits.astype(jnp.float32)).all())
+
+    (loss, aux), grads = jax.value_and_grad(T.lm_loss, has_aux=True)(
+        params, batch, cfg)
+    assert bool(jnp.isfinite(loss))
+    gnorm = sum(float(jnp.abs(g).sum()) for g in jax.tree.leaves(grads))
+    assert gnorm > 0
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_reduced_decode_matches_prefill(arch):
+    """serve path parity: prefill(s tokens) then decode 3 == forward(s+3)."""
+    cfg = get_config(arch).reduced()
+    if cfg.family == "encdec":
+        pytest.skip("encdec decode exercised in test_whisper_decode below")
+    params = T.init_model(jax.random.PRNGKey(1), cfg)
+    b, s, extra = 2, 8, 3
+    toks = jax.random.randint(jax.random.PRNGKey(2), (b, s + extra), 0,
+                              cfg.vocab)
+
+    batch_full = dict(_smoke_batch(cfg, b, s + extra), tokens=toks)
+    batch_full.pop("labels")
+    logits_full, _, _ = T.model_apply(
+        params, batch_full, cfg, mode="train", compute_dtype=jnp.float32)
+
+    cache = T.init_cache(cfg, b, s + extra, dtype=jnp.float32)
+    batch_pre = dict(_smoke_batch(cfg, b, s), tokens=toks[:, :s],
+                     cache_pos=jnp.int32(0))
+    batch_pre.pop("labels")
+    logits, cache, _ = T.model_apply(params, batch_pre, cfg, mode="prefill",
+                                     cache=cache, compute_dtype=jnp.float32)
+    got = [logits[:, -1]]
+    for t in range(s, s + extra - 1):
+        bd = {"tokens": toks[:, t:t + 1], "cache_pos": jnp.int32(t)}
+        if cfg.family == "vlm":
+            pos = jnp.full((b, 1), t)
+            bd["mrope_positions"] = jnp.broadcast_to(pos[None], (3, b, 1))
+        logits, cache, _ = T.model_apply(params, bd, cfg, mode="decode",
+                                         cache=cache,
+                                         compute_dtype=jnp.float32)
+        got.append(logits[:, -1])
+    want = logits_full[:, s - 1:s + extra - 1]
+    got = jnp.stack(got, axis=1)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=5e-2, atol=5e-2)
+
+
+def test_whisper_decode():
+    """enc-dec: prefill caches cross-KV from the encoder; decode continues."""
+    cfg = get_config("whisper-large-v3").reduced()
+    params = T.init_model(jax.random.PRNGKey(1), cfg)
+    b, s = 2, 8
+    batch = _smoke_batch(cfg, b, s)
+    batch.pop("labels")
+    cache = T.init_cache(cfg, b, s + 2, dtype=jnp.float32)
+    logits, cache, _ = T.model_apply(params, dict(batch, cache_pos=jnp.int32(0)),
+                                     cfg, mode="prefill", cache=cache,
+                                     compute_dtype=jnp.float32)
+    assert logits.shape == (b, 1, cfg.padded_vocab)
+    bd = {"tokens": jnp.full((b, 1), 3), "cache_pos": jnp.int32(s)}
+    logits2, cache, _ = T.model_apply(params, bd, cfg, mode="decode",
+                                      cache=cache, compute_dtype=jnp.float32)
+    assert bool(jnp.isfinite(logits2.astype(jnp.float32)).all())
+
+
+def test_long500k_applicability_rules():
+    runs = [a for a in ARCH_IDS
+            if cell_applicable(get_config(a), SHAPES["long_500k"])[0]]
+    assert sorted(runs) == ["hymba-1.5b", "mamba2-130m"]
+
+
+def test_hymba_global_vs_window_layers():
+    """Hymba's 3 global layers carry full caches; windowed layers ring-sized."""
+    cfg = get_config("hymba-1.5b")
+    cache = jax.eval_shape(lambda: T.init_cache(cfg, 2, 4096))
+    assert isinstance(cache, list)
+    lens = [c["kv"]["k"].shape[2] for c in cache]
+    assert lens[0] == 4096 and lens[15] == 4096 and lens[31] == 4096
+    assert lens[1] == cfg.sliding_window

@@ -1,0 +1,272 @@
+"""The paper's contribution: spike packing, LIF/TFLIF + BN folding, the four
+unified dataflows (ZSC/SSSC/WSSL/STDP), and Spikformer V2 end-to-end."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import lif, spike, unified
+from repro.core.spikformer import (SpikformerConfig, init, apply, loss_fn,
+                                   fold_inference_params, merge_bn_stats)
+
+
+# ---------------------------------------------------------------------------
+# spike packing
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), n=st.integers(1, 16))
+def test_pack_unpack_roundtrip(seed, n):
+    bits = (jax.random.uniform(jax.random.PRNGKey(seed), (3, 8 * n)) < 0.5)
+    packed = spike.pack_bits(bits.astype(jnp.float32))
+    assert packed.shape == (3, n) and packed.dtype == jnp.uint8
+    unpacked = spike.unpack_bits(packed)
+    np.testing.assert_array_equal(np.asarray(unpacked),
+                                  np.asarray(bits, np.float32))
+
+
+def test_bitplanes_reconstruct_uint8():
+    x = jnp.arange(256, dtype=jnp.uint8).reshape(16, 16)
+    planes = spike.bitplanes_u8(x)                       # (8, 16, 16)
+    recon = sum(planes[p] * (2.0 ** p) for p in range(8))
+    np.testing.assert_array_equal(np.asarray(recon, np.uint8), np.asarray(x))
+
+
+def test_space_to_depth_is_exact_conv_patches():
+    x = jnp.arange(2 * 4 * 4 * 3, dtype=jnp.float32).reshape(2, 4, 4, 3)
+    y = spike.space_to_depth(x, 2)
+    assert y.shape == (2, 2, 2, 12)
+    # top-left 2x2 patch of batch 0, channel-major order
+    np.testing.assert_array_equal(
+        np.asarray(y[0, 0, 0]),
+        np.asarray(jnp.stack([x[0, 0, 0], x[0, 0, 1],
+                              x[0, 1, 0], x[0, 1, 1]]).reshape(-1)))
+
+
+# ---------------------------------------------------------------------------
+# LIF dynamics + surrogate
+# ---------------------------------------------------------------------------
+
+def test_lif_fires_and_resets():
+    v, s = lif.lif_step(jnp.zeros(3), jnp.array([4.0, 0.1, 2.0]))
+    np.testing.assert_array_equal(np.asarray(s), [1.0, 0.0, 1.0])
+    # fired neurons reset to 0
+    assert float(v[0]) == 0.0 and float(v[2]) == 0.0
+    assert float(v[1]) > 0.0
+
+
+def test_lif_subthreshold_accumulates():
+    """Constant input below threshold accumulates toward x (tau=2 charge)."""
+    v = jnp.zeros(1)
+    for _ in range(10):
+        v, s = lif.lif_step(v, jnp.array([0.9]))
+        assert float(s[0]) == 0.0
+    assert 0.8 < float(v[0]) < 0.9   # converges to x from below
+
+
+def test_surrogate_gradient_nonzero():
+    g = jax.grad(lambda u: lif.spike_fn(u).sum())(jnp.array([-0.5, 0.0, 0.5]))
+    assert (np.asarray(jnp.abs(g)) > 0).all()
+    # peaked at the threshold
+    assert float(g[1]) > float(g[0]) and float(g[1]) > float(g[2])
+
+
+def test_tflif_scan_equals_stepwise():
+    x = jax.random.normal(jax.random.PRNGKey(0), (4, 64)) * 2
+    fused = lif.tflif(x)
+    v = jnp.zeros(64)
+    outs = []
+    for t in range(4):
+        v, s = lif.lif_step(v, x[t])
+        outs.append(s)
+    np.testing.assert_allclose(np.asarray(fused), np.asarray(jnp.stack(outs)))
+
+
+# ---------------------------------------------------------------------------
+# BN folding — the TFLIF merge
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_fold_bn_exact(seed):
+    """BN(x @ k + b) == x @ k' + b' after folding (inference stats)."""
+    ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+    x = jax.random.normal(ks[0], (5, 8))
+    kern = jax.random.normal(ks[1], (8, 6))
+    bias = jax.random.normal(ks[2], (6,))
+    bn = {
+        "scale": jax.random.normal(ks[3], (6,)) + 1.5,
+        "bias": jax.random.normal(ks[0], (6,)),
+        "mean": jax.random.normal(ks[1], (6,)),
+        "var": jax.random.uniform(ks[2], (6,), minval=0.1, maxval=2.0),
+    }
+    want = lif.bn_apply(bn, x @ kern + bias)
+    kf, bf = lif.fold_bn(kern, bias, bn)
+    got = x @ kf + bf
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# the four unified dataflows
+# ---------------------------------------------------------------------------
+
+def test_wssl_equals_per_timestep_linear():
+    """T-folded weight-stationary linear == per-timestep x @ W."""
+    ks = jax.random.split(jax.random.PRNGKey(1), 2)
+    s = (jax.random.uniform(ks[0], (4, 2, 10, 16)) < 0.3).astype(jnp.float32)
+    w = jax.random.normal(ks[1], (16, 8))
+    got = unified.wssl(s, w)
+    want = jnp.stack([s[t].reshape(-1, 16) @ w for t in range(4)]
+                     ).reshape(4, 2, 10, 8)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5,
+                               atol=1e-5)
+
+
+def test_zsc_equals_lax_conv():
+    """Zig-zag spiking conv (space-to-depth matmul) == real 2x2/s2 conv."""
+    ks = jax.random.split(jax.random.PRNGKey(2), 2)
+    s = (jax.random.uniform(ks[0], (4, 2, 8, 8, 3)) < 0.4).astype(jnp.float32)
+    kern = jax.random.normal(ks[1], (2, 2, 3, 5))
+    got = unified.zsc(s, kern)                           # (4,2,4,4,5)
+    x = s.reshape(8, 8, 8, 3)
+    want = jax.lax.conv_general_dilated(
+        x, kern, window_strides=(2, 2), padding="VALID",
+        dimension_numbers=("NHWC", "HWIO", "NHWC")).reshape(4, 2, 4, 4, 5)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_sssc_equals_uint8_conv():
+    """Shift-and-sum bit-plane conv == direct 8-bit conv (exact in fp32)."""
+    ks = jax.random.split(jax.random.PRNGKey(3), 2)
+    img = jax.random.randint(ks[0], (2, 8, 8, 3), 0, 256, jnp.uint8)
+    kern = jax.random.normal(ks[1], (2, 2, 3, 4))
+    got = unified.sssc(img, kern)
+    want = jax.lax.conv_general_dilated(
+        img.astype(jnp.float32), kern, window_strides=(2, 2), padding="VALID",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-2)
+
+
+def test_stdp_never_materializes_nxn_and_matches():
+    """unified.stdp (K^TV-first associativity) == naive (QK^T)V."""
+    ks = jax.random.split(jax.random.PRNGKey(4), 3)
+    q, k, v = [(jax.random.uniform(kk, (4, 1, 2, 32, 16)) < 0.3)
+               .astype(jnp.float32) for kk in ks]
+    got = unified.stdp(q, k, v, scale=0.125)
+    scores = jnp.einsum("tbhnd,tbhmd->tbhnm", q, k)
+    want = jnp.einsum("tbhnm,tbhmf->tbhnf", scores, v) * 0.125
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Spikformer V2 end-to-end
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def small():
+    cfg = SpikformerConfig().scaled()
+    params = init(jax.random.PRNGKey(0), cfg)
+    img = jax.random.randint(jax.random.PRNGKey(1), (2, 32, 32, 3), 0, 256,
+                             jnp.uint8)
+    return cfg, params, img
+
+
+def test_spikformer_shapes_no_nan(small):
+    cfg, params, img = small
+    logits, _ = apply(params, img, cfg)
+    assert logits.shape == (2, cfg.num_classes)
+    assert not bool(jnp.isnan(logits).any())
+
+
+def test_spikformer_activations_strictly_binary(small):
+    """The IAND residual keeps every inter-layer activation in {0,1} — the
+    property VESTA's whole datapath depends on. Instrument by checking the
+    residual combine output on random spike inputs."""
+    from repro.core.spikformer import _combine
+    a = (jax.random.uniform(jax.random.PRNGKey(0), (100,)) < 0.5).astype(jnp.float32)
+    b = (jax.random.uniform(jax.random.PRNGKey(1), (100,)) < 0.5).astype(jnp.float32)
+    out = _combine(a, b, "iand")
+    assert set(np.unique(np.asarray(out))) <= {0.0, 1.0}
+
+
+def test_spikformer_train_step_reduces_loss(small):
+    cfg, params, img = small
+    batch = {"image": img, "label": jnp.array([3, 7])}
+
+    @jax.jit
+    def step(p):
+        (l, (acc, stats)), g = jax.value_and_grad(
+            loss_fn, has_aux=True)(p, batch, cfg)
+        p2 = jax.tree_util.tree_map(lambda w, gw: w - 0.5 * gw, p, g)
+        return l, p2
+
+    l0, params = step(params)
+    for _ in range(8):
+        l1, params = step(params)
+    assert float(l1) < float(l0)
+
+
+def test_bn_fold_inference_equivalence(small):
+    """Folded inference params (matmul+LIF only graph) == train-mode graph
+    with inference BN, on the SAME spike trajectory."""
+    cfg, params, img = small
+    logits_ref, _ = apply(params, img, cfg, train=False)
+
+    folded = fold_inference_params(params, cfg)
+    # run the folded graph manually: conv stem (as matmuls) + blocks
+    from repro.core.unified import wssl, stdp
+    from repro.core.spike import space_to_depth, bitplanes_u8, rate_decode
+    from repro.core.lif import tflif
+    from repro.core.spikformer import _combine
+    t = cfg.timesteps
+
+    # SSSC layer 0 on bit-planes with folded kernel/bias
+    c0 = folded["scs"]["conv0"]
+    x0 = space_to_depth(img, 2)
+    planes = bitplanes_u8(x0)
+    per = wssl(planes, c0["kernel"])
+    scales = (2.0 ** jnp.arange(8)).reshape(8, 1, 1, 1, 1)
+    y = (per * scales).sum(0) + c0["bias"]
+    y = jnp.broadcast_to(y[None], (t, *y.shape))
+    x = tflif(y)
+    for i in range(1, len(cfg.scs_channels)):
+        ci = folded["scs"][f"conv{i}"]
+        y = wssl(space_to_depth(x, 2), ci["kernel"]) + ci["bias"]
+        x = tflif(y)
+    tt, b, h, w, c = x.shape
+    x = x.reshape(tt, b, h * w, c)
+    for i in range(cfg.depth):
+        blk = folded["blocks"][f"b{i}"]
+        dh = cfg.dim // cfg.heads
+        def lbl(pp, z):
+            return tflif(wssl(z, pp["kernel"]) + pp["bias"])
+        qs = lbl(blk["ssa"]["wq"], x)
+        ks_ = lbl(blk["ssa"]["wk"], x)
+        vs = lbl(blk["ssa"]["wv"], x)
+        def heads(z):
+            return z.reshape(tt, b, -1, cfg.heads, dh).transpose(0, 1, 3, 2, 4)
+        att = stdp(heads(qs), heads(ks_), heads(vs), scale=cfg.attn_scale)
+        att = tflif(att).transpose(0, 1, 3, 2, 4).reshape(tt, b, -1, cfg.dim)
+        att = lbl(blk["ssa"]["wo"], att)
+        x = _combine(att, x, cfg.residual)
+        s1 = lbl(blk["mlp"]["fc1"], x)
+        s2 = lbl(blk["mlp"]["fc2"], s1)
+        x = _combine(s2, x, cfg.residual)
+    rate = rate_decode(x, axis=0).mean(axis=1)
+    logits_folded = rate @ folded["head"]["kernel"] + folded["head"]["bias"]
+    np.testing.assert_allclose(np.asarray(logits_folded),
+                               np.asarray(logits_ref), rtol=1e-3, atol=1e-3)
+
+
+def test_merge_bn_stats_roundtrip(small):
+    cfg, params, img = small
+    _, stats = apply(params, img, cfg, train=True)
+    merged = merge_bn_stats(params, stats)
+    # running stats moved away from init (mean 0 / var 1)
+    bn = merged["scs"]["conv0"]["bn"]
+    assert float(jnp.abs(bn["mean"]).max()) > 0.0

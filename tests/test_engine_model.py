@@ -1,0 +1,64 @@
+"""Paper-validation: the analytic VESTA engine model reproduces Tables I/II."""
+import pytest
+
+from repro.core.engine_model import (PE_TOTAL, PEAK_GSOPS, PAPER_TABLE2,
+                                     macs_by_method, table2_distribution,
+                                     frames_per_second, table1_summary,
+                                     implied_utilization)
+
+
+def test_peak_throughput_table1():
+    assert PE_TOTAL == 4096
+    assert PEAK_GSOPS == pytest.approx(4096.0)      # paper Table I
+
+
+def test_table2_distribution_calibrated():
+    """The calibrated cycle model reproduces the paper's Table II split for
+    WSSL / STDP / SSSC. ZSC is the documented exception: our architectural
+    reconstruction counts ~12x more ZSC MACs than the paper's 0.19% share
+    implies even at utilization 1.0 — consistent with zero-spike skipping in
+    the PE array (or narrower unpublished SCS widths); see EXPERIMENTS.md
+    §Paper-validation."""
+    dist = table2_distribution(calibrated=True)
+    for k in ("WSSL", "STDP", "SSSC"):
+        assert dist[k] == pytest.approx(PAPER_TABLE2[k], abs=1.5), (k, dist)
+    assert dist["ZSC"] < 2.0   # capped at util=1.0; paper claims 0.19
+
+
+def test_table2_ordering_uncalibrated():
+    """Even the ideal (utilization=1) model gets the structural claim of
+    Table II right: WSSL dominates and the conv stem is a small tail."""
+    dist = table2_distribution(calibrated=False)
+    assert dist["WSSL"] > 55.0
+    assert dist["SSSC"] + dist["ZSC"] < 10.0
+
+
+def test_fps_brackets_paper():
+    """Ideal PEs give > 30 fps; calibrated matches the paper's 30 fps."""
+    assert frames_per_second(calibrated=False) > 30.0
+    assert frames_per_second(calibrated=True) == pytest.approx(30.0, rel=0.05)
+
+
+def test_macs_scale():
+    """Spikformer V2-8-512 @224px: total work is O(10) GMACs/frame
+    (8 encoder blocks x ~196 tokens x 512 dim x T=4)."""
+    total = sum(macs_by_method().values())
+    assert 5e9 < total < 30e9
+
+
+def test_implied_utilization_bounded():
+    u = implied_utilization()
+    for k, v in u.items():
+        assert 0.0 < v <= 1.0, (k, v)
+    # WSSL calibrates to ~0.36 — 512-row weight columns against 196-token
+    # maps leave PE units idle between column switches; STDP/SSSC calibrate
+    # low (buffer-bound, matching Table III's "reduce buffer" claims).
+    assert 0.2 < u["WSSL"] < 0.6
+    assert u["ZSC"] == 1.0   # capped (see test_table2_distribution_calibrated)
+
+
+def test_table1_summary_fields():
+    s = table1_summary()
+    assert s["pe_number"] == 4096
+    assert s["frequency_mhz"] == 500.0
+    assert s["paper_fps"] == 30.0

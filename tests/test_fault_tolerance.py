@@ -1,0 +1,129 @@
+"""Control-plane fault tolerance: heartbeats, stragglers, restart budget,
+loss guard, and the supervisor's restore loop with injected failures."""
+import math
+
+import pytest
+
+from repro.runtime.fault_tolerance import (HeartbeatMonitor, StragglerDetector,
+                                           RestartPolicy, LossGuard,
+                                           TrainSupervisor, NodeFailure)
+
+
+class FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+    def advance(self, dt):
+        self.t += dt
+
+
+# ---------------------------------------------------------------------------
+
+def test_heartbeat_detects_silence():
+    clk = FakeClock()
+    hb = HeartbeatMonitor(n_nodes=4, timeout_s=10.0, clock=clk)
+    clk.advance(5)
+    for n in (0, 1, 3):
+        hb.beat(n)
+    clk.advance(7)
+    assert hb.dead_nodes() == [2]
+    assert not hb.healthy()
+    hb.beat(2)
+    assert hb.healthy() is False or hb.dead_nodes() == []  # node 2 revived
+    assert 2 not in hb.dead_nodes()
+
+
+def test_straggler_needs_patience():
+    det = StragglerDetector(n_nodes=8, z_thresh=4.0, patience=3)
+    base = [1.0] * 8
+    assert det.update(base) == []
+    slow = base.copy()
+    slow[5] = 3.0
+    assert det.update(slow) == []       # strike 1
+    assert det.update(slow) == []       # strike 2
+    assert det.update(slow) == [5]      # strike 3 => flagged
+
+
+def test_straggler_recovers():
+    det = StragglerDetector(n_nodes=4, patience=3)
+    det.update([1, 1, 1, 5.0])
+    for _ in range(16):                 # EWMA decays back toward the median
+        out = det.update([1, 1, 1, 1.0])
+    assert out == []
+
+
+def test_restart_policy_budget_window():
+    clk = FakeClock()
+    pol = RestartPolicy(max_restarts=2, window_s=100, backoff_s=1,
+                        clock=clk)
+    assert pol.record_failure()
+    assert pol.record_failure()
+    assert not pol.record_failure()       # budget exhausted
+    clk.advance(200)                      # window rolls over
+    assert pol.record_failure()
+
+
+def test_restart_backoff_grows_and_caps():
+    pol = RestartPolicy(backoff_s=2, backoff_mult=3, max_backoff_s=10)
+    pol.record_failure()
+    assert pol.next_delay() == 2
+    pol.record_failure()
+    assert pol.next_delay() == 6
+    pol.record_failure()
+    assert pol.next_delay() == 10   # capped
+
+
+def test_loss_guard():
+    g = LossGuard(spike_mult=5.0, warmup=2)
+    assert g.check(4.0) and g.check(3.0) and g.check(2.0)
+    assert not g.check(float("nan"))
+    assert g.check(3.0)
+    assert not g.check(11.0)        # > 5 x best(2.0)
+
+
+def test_supervisor_restores_and_completes():
+    """Segment fails twice mid-run; supervisor restores from 'checkpoint'
+    (the captured step) and finishes."""
+    log = []
+    ckpt = {"step": 0}
+
+    def make_state(restore):
+        if restore is None:
+            return {"step": 0}
+        log.append(("restore", ckpt["step"]))
+        return {"step": ckpt["step"]}
+
+    fails = {5: True, 8: True}
+
+    def run_segment(state):
+        for step in range(state["step"], 12):
+            if fails.pop(step, False):
+                raise NodeFailure(step)
+            ckpt["step"] = step + 1
+            log.append(("step", step))
+        return None
+
+    sup = TrainSupervisor(RestartPolicy(backoff_s=0), make_state, run_segment,
+                          sleep=lambda s: None)
+    out = sup.run()
+    assert out == {"restarts": 2, "completed": True}
+    steps = [s for kind, s in log if kind == "step"]
+    assert steps == sorted(steps) and steps[-1] == 11
+    assert ("restore", 5) in log and ("restore", 8) in log
+
+
+def test_supervisor_gives_up_when_budget_spent():
+    def make_state(restore):
+        return {}
+
+    def run_segment(state):
+        raise NodeFailure("always")
+
+    sup = TrainSupervisor(RestartPolicy(max_restarts=3, backoff_s=0),
+                          make_state, run_segment, sleep=lambda s: None)
+    out = sup.run()
+    assert out["completed"] is False
+    assert out["restarts"] == 3
