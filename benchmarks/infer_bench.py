@@ -1,0 +1,88 @@
+"""Inference throughput: packed-bit datapath vs float reference, end to end.
+
+Times the jit-compiled fixed-batch ``InferenceSession`` forward for both
+backends on the same reduced Spikformer config and random uint8 images, and
+emits ONE JSON record (stdout, and --out FILE) so successive PRs accumulate a
+perf trajectory. Also reports the activation-traffic ratio (the 8x/T-fold
+packing win that holds on any backend) and verifies the two paths agree
+bit-exactly before timing — a benchmark of a wrong path is worthless.
+
+  PYTHONPATH=src python benchmarks/infer_bench.py [--batch-size 8] [--out f.json]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import platform
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.spikformer import SpikformerConfig, init as spik_init
+from repro.infer import InferenceSession, benchmark_session
+
+
+def run(*, batch_size: int = 8, batches: int = 4, seed: int = 0,
+        img_size: int = 32, dim: int = 64, depth: int = 2) -> dict:
+    cfg = SpikformerConfig().scaled(img_size=img_size, dim=dim, depth=depth)
+    params = spik_init(jax.random.PRNGKey(seed), cfg)
+
+    sessions = {
+        name: InferenceSession(params, cfg, backend=name,
+                               batch_size=batch_size)
+        for name in ("packed", "reference")
+    }
+
+    # correctness gate: identical logits on one probe batch
+    probe = jax.random.randint(jax.random.PRNGKey(seed + 1),
+                               sessions["packed"].input_shape, 0, 256,
+                               jnp.uint8)
+    exact = bool((np.asarray(sessions["packed"].logits(probe))
+                  == np.asarray(sessions["reference"].logits(probe))).all())
+
+    results = {name: benchmark_session(s, batches=batches, seed=seed + 2)
+               for name, s in sessions.items()}
+
+    t = cfg.timesteps
+    record = {
+        "bench": "infer_spikformer",
+        "backend_platform": jax.default_backend(),
+        "machine": platform.machine(),
+        "config": {"img_size": cfg.img_size, "dim": cfg.dim,
+                   "depth": cfg.depth, "heads": cfg.heads, "timesteps": t,
+                   "batch_size": batch_size, "batches": batches},
+        "bit_exact": exact,
+        "packed": results["packed"],
+        "reference": results["reference"],
+        "packed_speedup": round(results["packed"]["images_per_s"]
+                                / results["reference"]["images_per_s"], 3),
+        # storage bytes per activation element between layers:
+        # float spikes carry T fp32 values, packed carries 1 uint8
+        "activation_traffic_ratio": 4.0 * t,
+        "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
+    }
+    return record
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--batch-size", type=int, default=8)
+    ap.add_argument("--batches", type=int, default=4)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default=None, help="also append JSON to FILE")
+    args = ap.parse_args(argv)
+
+    record = run(batch_size=args.batch_size, batches=args.batches,
+                 seed=args.seed)
+    line = json.dumps(record)
+    print(line)
+    if args.out:
+        with open(args.out, "a") as f:
+            f.write(line + "\n")
+    return record
+
+
+if __name__ == "__main__":
+    main()

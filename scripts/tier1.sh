@@ -1,0 +1,38 @@
+#!/usr/bin/env bash
+# Tier-1 verify with an explicit pass/fail/collect-error summary.
+#
+#   scripts/tier1.sh            # full suite (the ROADMAP.md tier-1 command)
+#   scripts/tier1.sh --fast     # skip @slow subprocess integration runs
+#   scripts/tier1.sh <pytest args...>   # passed through
+#
+# Exit code is pytest's, EXCEPT that collection errors always fail loudly —
+# a module that stops collecting silently removes its tests from the count,
+# which is how the seed suite rotted (3 modules uncollected for a missing
+# dependency went unnoticed).
+set -u
+cd "$(dirname "$0")/.."
+
+ARGS=(-q)
+if [[ "${1:-}" == "--fast" ]]; then
+    ARGS+=(-m "not slow"); shift
+fi
+
+OUT=$(PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest "${ARGS[@]}" "$@" 2>&1)
+CODE=$?
+echo "$OUT"
+
+TAIL=$(echo "$OUT" | tail -n 3)
+ERRORS=$(echo "$OUT" | grep -c "^ERROR ")
+echo
+echo "=== tier1 summary ==="
+echo "  result line : $(echo "$TAIL" | grep -E '(passed|failed|error)' | tail -n 1)"
+echo "  collect errs: $ERRORS"
+if [[ "$ERRORS" -gt 0 ]]; then
+    echo "  status      : FAIL (collection errors — tests silently missing)"
+    exit 2
+elif [[ $CODE -eq 0 ]]; then
+    echo "  status      : PASS"
+else
+    echo "  status      : FAIL (exit $CODE)"
+fi
+exit $CODE

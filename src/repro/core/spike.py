@@ -38,6 +38,28 @@ def unpack_bits(x, axis: int = -1, *, count: int = 8, dtype=jnp.float32):
     return jnp.moveaxis(bits, -1, axis)
 
 
+def pack_timesteps(spikes, *, time_axis: int = 0):
+    """Temporal packing for the inference datapath: a (T, ...) binary spike
+    train becomes one uint8 per neuron with bit t = the timestep-t spike
+    (T <= 8, matching ``kernels.ref.tflif_ref`` output). The T axis is
+    consumed; all other axes keep their layout."""
+    t = spikes.shape[time_axis]
+    assert t <= 8, f"temporal packing holds at most 8 timesteps, got {t}"
+    x = jnp.moveaxis(spikes, time_axis, 0).astype(jnp.uint8)
+    shifts = jnp.arange(t, dtype=jnp.uint8).reshape((t,) + (1,) * (x.ndim - 1))
+    return jnp.bitwise_or.reduce(x << shifts, axis=0)
+
+
+def unpack_timesteps(packed, t: int, *, time_axis: int = 0,
+                     dtype=jnp.float32):
+    """Inverse of ``pack_timesteps``: uint8 (...,) -> (T, ...) binary planes
+    inserted at ``time_axis`` (LSB = timestep 0)."""
+    assert t <= 8, t
+    planes = (packed[None, ...] >> jnp.arange(t, dtype=jnp.uint8).reshape(
+        (t,) + (1,) * packed.ndim)) & jnp.uint8(1)
+    return jnp.moveaxis(planes.astype(dtype), 0, time_axis)
+
+
 def bitplanes_u8(x, *, dtype=jnp.float32):
     """uint8 tensor (...,) -> (8, ...) binary planes, LSB first (SSSC input)."""
     planes = (x[None, ...] >> jnp.arange(8, dtype=jnp.uint8).reshape(

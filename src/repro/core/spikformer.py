@@ -201,6 +201,49 @@ def fold_inference_params(params, cfg: SpikformerConfig):
     return out
 
 
+def forward_folded(folded, images_u8, cfg: SpikformerConfig, *, backend):
+    """The inference forward over BN-folded params through a pluggable
+    execution backend — the graph VESTA executes: matmuls + LIF comparisons
+    only, with every activation between layers a binary spike train.
+
+    ``backend`` implements the dataflow ops over an opaque activation type;
+    the implementations live in ``repro.infer.backends`` (float {0,1} spike
+    trains for the differentiable reference, packed uint8 bit planes for the
+    hardware-shaped path). Returns (B, num_classes) logits.
+    """
+    t = cfg.timesteps
+
+    c0 = folded["scs"]["conv0"]
+    x = backend.sssc_lif(images_u8, c0["kernel"], c0["bias"], t=t)
+    for i in range(1, len(cfg.scs_channels)):
+        ci = folded["scs"][f"conv{i}"]
+        x = backend.zsc_lif(x, ci["kernel"], ci["bias"], t=t)
+    x = backend.to_tokens(x)
+
+    for i in range(cfg.depth):
+        blk = folded["blocks"][f"b{i}"]
+        ssa, mlp = blk["ssa"], blk["mlp"]
+        q = backend.wssl_lif(x, ssa["wq"]["kernel"], ssa["wq"]["bias"], t=t)
+        k = backend.wssl_lif(x, ssa["wk"]["kernel"], ssa["wk"]["bias"], t=t)
+        v = backend.wssl_lif(x, ssa["wv"]["kernel"], ssa["wv"]["bias"], t=t)
+        att = backend.stdp_lif(q, k, v, heads=cfg.heads,
+                               scale=cfg.attn_scale, t=t)
+        att = backend.wssl_lif(att, ssa["wo"]["kernel"], ssa["wo"]["bias"],
+                               t=t)
+        x = backend.residual(att, x, cfg.residual)
+        s1 = backend.wssl_lif(x, mlp["fc1"]["kernel"], mlp["fc1"]["bias"], t=t)
+        s2 = backend.wssl_lif(s1, mlp["fc2"]["kernel"], mlp["fc2"]["bias"],
+                              t=t)
+        x = backend.residual(s2, x, cfg.residual)
+
+    rate = backend.rate(x, t=t)                         # (B, D)
+    head = folded["head"]
+    logits = rate @ head["kernel"].astype(rate.dtype)
+    if "bias" in head:
+        logits = logits + head["bias"].astype(logits.dtype)
+    return logits
+
+
 def loss_fn(params, batch, cfg: SpikformerConfig, *, train: bool = True):
     """Cross-entropy over classes; returns (loss, (accuracy, stats))."""
     logits, stats = apply(params, batch["image"], cfg, train=train)

@@ -1,0 +1,7 @@
+"""Packed-bit Spikformer inference: the bridge from the float training
+reference to VESTA's unified-PE datapath. See README.md in this directory."""
+from .backends import FloatBackend, PackedBackend, get_backend
+from .session import InferenceSession, benchmark_session
+
+__all__ = ["FloatBackend", "PackedBackend", "get_backend",
+           "InferenceSession", "benchmark_session"]

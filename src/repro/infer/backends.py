@@ -1,0 +1,139 @@
+"""Execution backends for the BN-folded Spikformer inference graph.
+
+``core.spikformer.forward_folded`` drives the layer sequence; a backend
+decides how activations are represented and which kernels execute each of the
+four unified dataflows:
+
+  FloatBackend  — spikes are {0,1} float32 tensors with an explicit leading T
+                  axis, every op runs through ``core.unified`` (the training
+                  reference). Activation shapes: (T, B, H, W, C) / (T, B, N, D).
+  PackedBackend — spikes are packed uint8, one byte = T<=8 timesteps of one
+                  neuron (bit t = timestep t), dispatched through the batched
+                  packed entry points in ``kernels.ops`` (Pallas on TPU, the
+                  mirrored-reshape CPU oracle elsewhere). Activation shapes:
+                  (B, H, W, C) / (B, N, D) uint8 — 8x (x 32/T) less
+                  inter-layer traffic, the paper's Small-Input/Output-SRAM
+                  packing.
+
+The CPU route of PackedBackend performs operation-for-operation the same
+float32 arithmetic as FloatBackend (same reshapes, same dots, same reduction
+orders), so their logits are bit-identical — spikes are binary, there is no
+tolerance to hide behind, and the parity tests assert exact equality.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from ..core import unified
+from ..core.lif import tflif
+from ..core.spike import (rate_decode, space_to_depth, unpack_timesteps)
+from ..kernels import ops
+
+
+class FloatBackend:
+    """Reference backend: float spike trains through ``core.unified``."""
+
+    name = "reference"
+
+    def sssc_lif(self, images_u8, kernel, bias, *, t: int):
+        y = unified.sssc(images_u8, kernel, bias)       # (B, H/2, W/2, F)
+        y = jnp.broadcast_to(y[None], (t, *y.shape))    # image constant in T
+        return tflif(y)
+
+    def zsc_lif(self, x, kernel, bias, *, t: int):
+        return tflif(unified.zsc(x, kernel, bias))
+
+    def wssl_lif(self, x, kernel, bias, *, t: int):
+        return tflif(unified.wssl(x, kernel, bias))
+
+    def stdp_lif(self, q, k, v, *, heads: int, scale: float, t: int):
+        tt, b, n, d = q.shape
+        dh = d // heads
+
+        def to_heads(z):
+            return z.reshape(tt, b, n, heads, dh).transpose(0, 1, 3, 2, 4)
+
+        att = unified.stdp(to_heads(q), to_heads(k), to_heads(v), scale=scale)
+        att = tflif(att)                                # (T, B, H, N, dh)
+        return att.transpose(0, 1, 3, 2, 4).reshape(tt, b, n, d)
+
+    def residual(self, new, res, mode: str):
+        if mode == "iand":
+            return (1.0 - new) * res
+        return new + res
+
+    def to_tokens(self, x):
+        tt, b, h, w, c = x.shape
+        return x.reshape(tt, b, h * w, c)
+
+    def rate(self, x, *, t: int):
+        return rate_decode(x, axis=0).mean(axis=1)      # (B, D)
+
+
+class PackedBackend:
+    """Hardware-shaped backend: packed uint8 planes through ``kernels.ops``.
+
+    ``pallas=None`` auto-selects (Pallas on TPU, CPU oracle otherwise);
+    pass True/False to force either route.
+    """
+
+    name = "packed"
+
+    def __init__(self, *, pallas: bool | None = None):
+        self.pallas = pallas
+
+    def sssc_lif(self, images_u8, kernel, bias, *, t: int):
+        x = space_to_depth(images_u8, 2)                # (B,H/2,W/2,4C) u8
+        acc = ops.sssc_linear(x, kernel, bias, pallas=self.pallas)
+        acc = jnp.broadcast_to(acc[None], (t, *acc.shape))
+        return ops.tflif_pack(acc, pallas=self.pallas)  # (B,H/2,W/2,F) u8
+
+    def zsc_lif(self, x, kernel, bias, *, t: int):
+        acc = ops.spike_linear(space_to_depth(x, 2), kernel, bias, t=t,
+                               pallas=self.pallas)
+        return ops.tflif_pack(acc, pallas=self.pallas)
+
+    def wssl_lif(self, x, kernel, bias, *, t: int):
+        acc = ops.spike_linear(x, kernel, bias, t=t, pallas=self.pallas)
+        return ops.tflif_pack(acc, pallas=self.pallas)
+
+    def stdp_lif(self, q, k, v, *, heads: int, scale: float, t: int):
+        b, n, d = q.shape
+        dh = d // heads
+
+        def to_heads(z):
+            return z.reshape(b, n, heads, dh).transpose(0, 2, 1, 3)
+
+        acc = ops.stdp_attention_packed(
+            to_heads(q), to_heads(k), to_heads(v), t=t, scale=scale,
+            pallas=self.pallas)                         # (t, B, H, N, dh)
+        att = ops.tflif_pack(acc, pallas=self.pallas)   # (B, H, N, dh) u8
+        return att.transpose(0, 2, 1, 3).reshape(b, n, d)
+
+    def residual(self, new, res, mode: str):
+        if mode != "iand":
+            raise ValueError(
+                "packed activations are strictly binary; residual mode "
+                f"{mode!r} requires the float reference backend")
+        # SEW IAND on packed bytes: (NOT new) AND res. Bits >= T are 0 in
+        # `res`, so the complement's high bits are masked off for free.
+        return jnp.bitwise_and(jnp.bitwise_not(new), res)
+
+    def to_tokens(self, x):
+        b, h, w, c = x.shape
+        return x.reshape(b, h * w, c)
+
+    def rate(self, x, *, t: int):
+        spikes = unpack_timesteps(x, t)                 # (T, B, N, D) float
+        return rate_decode(spikes, axis=0).mean(axis=1)
+
+
+def get_backend(name, *, pallas: bool | None = None):
+    """Backend by name ("packed" | "reference"), or pass an instance through."""
+    if not isinstance(name, str):
+        return name
+    if name == "packed":
+        return PackedBackend(pallas=pallas)
+    if name in ("reference", "float"):
+        return FloatBackend()
+    raise ValueError(f"unknown inference backend {name!r}")

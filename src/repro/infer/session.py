@@ -1,0 +1,106 @@
+"""InferenceSession: static-shape batched Spikformer inference.
+
+Wraps the BN-folded forward (``core.spikformer.forward_folded``) behind one
+jit-compiled entry point with a FIXED batch shape — the serving contract that
+keeps the step compiled regardless of how many images each request carries.
+Arbitrary request sizes are padded to the next ``batch_size`` multiple and
+run in chunks; pad rows are dropped before returning.
+
+    cfg = SpikformerConfig().scaled()
+    params = spikformer.init(jax.random.PRNGKey(0), cfg)
+    sess = InferenceSession(params, cfg, backend="packed", batch_size=8)
+    logits = sess.logits(images_u8)          # (N, classes), any N
+    labels = sess.classify(images_u8)        # (N,) argmax
+
+The default "packed" backend carries every inter-layer activation as uint8
+bit planes (1 bit/spike in storage); "reference" runs the float
+``core.unified`` graph — on CPU the two produce bit-identical logits.
+"""
+from __future__ import annotations
+
+import functools
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import spikformer
+from ..core.spikformer import SpikformerConfig, fold_inference_params
+from .backends import get_backend
+
+
+class InferenceSession:
+    """Compiled, fixed-shape Spikformer classifier over a chosen backend."""
+
+    def __init__(self, params, cfg: SpikformerConfig, *, backend="packed",
+                 batch_size: int = 8, folded: bool = False,
+                 pallas: bool | None = None, jit: bool = True):
+        """``params`` is a training param tree (BN folded here) unless
+        ``folded=True``, in which case it is already a fold_inference_params
+        tree. ``batch_size`` is the static compile shape."""
+        self.cfg = cfg
+        self.batch_size = int(batch_size)
+        self.backend = get_backend(backend, pallas=pallas)
+        self.folded = params if folded else fold_inference_params(params, cfg)
+
+        def fwd(folded_tree, images):
+            return spikformer.forward_folded(folded_tree, images, cfg,
+                                             backend=self.backend)
+
+        self._fwd = jax.jit(fwd) if jit else fwd
+
+    @property
+    def input_shape(self):
+        c = self.cfg
+        return (self.batch_size, c.img_size, c.img_size, c.in_channels)
+
+    def warmup(self):
+        """Compile (and time) the fixed-shape step on zero images."""
+        t0 = time.perf_counter()
+        jax.block_until_ready(
+            self._fwd(self.folded, jnp.zeros(self.input_shape, jnp.uint8)))
+        return time.perf_counter() - t0
+
+    def logits(self, images_u8):
+        """images_u8: (N, H, W, C) uint8, any N >= 1 -> (N, classes) f32."""
+        images_u8 = jnp.asarray(images_u8, jnp.uint8)
+        n = images_u8.shape[0]
+        bs = self.batch_size
+        pad = (-n) % bs
+        if pad:
+            images_u8 = jnp.concatenate(
+                [images_u8, jnp.zeros((pad, *images_u8.shape[1:]),
+                                      jnp.uint8)], axis=0)
+        outs = [self._fwd(self.folded, images_u8[i:i + bs])
+                for i in range(0, n + pad, bs)]
+        return jnp.concatenate(outs, axis=0)[:n]
+
+    def classify(self, images_u8):
+        """(N, H, W, C) uint8 -> (N,) int32 argmax class ids."""
+        return jnp.argmax(self.logits(images_u8), axis=-1).astype(jnp.int32)
+
+    def __call__(self, images_u8):
+        return self.logits(images_u8)
+
+
+def benchmark_session(sess: InferenceSession, *, batches: int = 4,
+                      seed: int = 0):
+    """Throughput probe: images/sec over ``batches`` full compiled batches
+    of random uint8 images (excludes compile via warmup). Returns a dict."""
+    compile_s = sess.warmup()
+    imgs = np.asarray(jax.random.randint(
+        jax.random.PRNGKey(seed), sess.input_shape, 0, 256, jnp.uint8))
+    t0 = time.perf_counter()
+    for _ in range(batches):
+        jax.block_until_ready(sess._fwd(sess.folded, jnp.asarray(imgs)))
+    wall = time.perf_counter() - t0
+    n = batches * sess.batch_size
+    return {
+        "backend": sess.backend.name,
+        "batch_size": sess.batch_size,
+        "images": n,
+        "compile_s": round(compile_s, 3),
+        "wall_s": round(wall, 4),
+        "images_per_s": round(n / wall, 2),
+    }

@@ -15,6 +15,7 @@ from .spike_matmul import spike_matmul as _spike_matmul_pallas
 from .tflif import tflif_fused as _tflif_pallas
 from .stdp_attention import stdp_attention as _stdp_pallas
 from .flash_attention import flash_attention as _flash_pallas
+from ..core.spike import bitplanes_u8, unpack_timesteps
 
 
 def on_tpu() -> bool:
@@ -57,3 +58,87 @@ def flash_attention(q, k, v, *, scale: float, causal: bool = True,
         return _flash_pallas(q, k, v, scale=scale, causal=causal,
                              interpret=not on_tpu(), **blocks)
     return ref.flash_attention_ref(q, k, v, scale=scale, causal=causal)
+
+
+# ---------------------------------------------------------------------------
+# Batched packed-bit entry points — the inference datapath
+# ---------------------------------------------------------------------------
+# These are what ``repro.infer`` dispatches through: activations stay packed
+# 8-per-uint8 between layers (temporal bits for WSSL/ZSC/STDP, value bits for
+# SSSC) and only unpack inside the matmul. The CPU reference route mirrors
+# ``core.unified`` operation-for-operation — same reshapes, same single dot,
+# same reduction order — so it is bit-exact against the float training graph;
+# the Pallas route trades that for the fused uint8 kernels.
+
+def spike_linear(x_packed, w, bias=None, *, t: int,
+                 pallas: bool | None = None, **blocks):
+    """Packed WSSL: x_packed (..., K) uint8 (bit i = timestep i's spike) ->
+    (t, ..., N) per-timestep accumulators, T folded into the row dim of one
+    weight-stationary dot exactly like ``unified.wssl``."""
+    lead, k = x_packed.shape[:-1], x_packed.shape[-1]
+    x2 = x_packed.reshape(-1, k)
+    m = x2.shape[0]
+    if use_pallas(pallas):
+        per = _spike_matmul_pallas(x2, w, mode="per_plane",
+                                   interpret=not on_tpu(), **blocks)[:t]
+    else:
+        planes = unpack_timesteps(x2, t)                       # (t, M, K)
+        per = (planes.reshape(t * m, k) @ w.astype(jnp.float32)
+               ).reshape(t, m, w.shape[-1])
+    if bias is not None:
+        per = per + bias.astype(per.dtype)
+    return per.reshape((t, *lead, w.shape[-1]))
+
+
+def sssc_linear(x_u8, w, bias=None, *, pallas: bool | None = None, **blocks):
+    """Packed SSSC: x_u8 (..., K) uint8 *values* -> (..., N) accumulators via
+    the shift-and-sum of 8 bit-plane dots (``y = sum_k 2^k (plane_k . W)``).
+    The Pallas route collapses the 8 planes into one dot (shift_sum mode)."""
+    lead, k = x_u8.shape[:-1], x_u8.shape[-1]
+    x2 = x_u8.reshape(-1, k)
+    m = x2.shape[0]
+    if use_pallas(pallas):
+        y = _spike_matmul_pallas(x2, w, mode="shift_sum",
+                                 interpret=not on_tpu(), **blocks)
+    else:
+        planes = bitplanes_u8(x2)                              # (8, M, K)
+        per = (planes.reshape(8 * m, k) @ w.astype(jnp.float32)
+               ).reshape(8, m, w.shape[-1])
+        scales = (2.0 ** jnp.arange(8, dtype=per.dtype)).reshape(8, 1, 1)
+        y = (per * scales).sum(axis=0)
+    if bias is not None:
+        y = y + bias.astype(y.dtype)
+    return y.reshape((*lead, w.shape[-1]))
+
+
+def tflif_pack(acc, bias=None, *, t: int | None = None, tau: float = 2.0,
+               v_th: float = 1.0, pallas: bool | None = None):
+    """Batched TFLIF: (T, ...) float accumulators -> (...) uint8 packed
+    spikes (bit i = timestep i). The whole T axis is fused; ``bias`` (the
+    BN-folded shift) is added inside the same pass."""
+    t = acc.shape[0] if t is None else t
+    assert t <= 8, f"one uint8 holds at most 8 timestep bits, got T={t}"
+    lead = acc.shape[1:]
+    x2 = acc.reshape(t, -1)
+    if bias is not None:
+        bias = jnp.broadcast_to(bias, lead).reshape(-1)
+    packed = tflif_fused(x2, bias, tau=tau, v_th=v_th, pallas=pallas)
+    return packed.reshape(lead)
+
+
+def stdp_attention_packed(q_packed, k_packed, v_packed, *, t: int,
+                          scale: float, pallas: bool | None = None, **blocks):
+    """Packed STDP: q/k/v (..., N, Dh) uint8 temporal-packed spikes ->
+    (t, ..., N, Dh) attention accumulators. Timesteps attend independently
+    (spike attention has no cross-T term), so T folds into the batch-heads
+    grid dim of the tile-fused kernel."""
+    lead = q_packed.shape[:-2]
+    n, dh = q_packed.shape[-2:]
+
+    def unfold(z):
+        planes = unpack_timesteps(z.reshape(-1, n, z.shape[-1]), t)
+        return planes.reshape(-1, n, z.shape[-1])              # (t*BH, N, Dh)
+
+    out = stdp_attention(unfold(q_packed), unfold(k_packed), unfold(v_packed),
+                         scale=scale, pallas=pallas, **blocks)
+    return out.reshape((t, *lead, n, dh))

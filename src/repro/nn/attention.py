@@ -19,6 +19,7 @@ import jax.numpy as jnp
 from .module import KeyStream
 from .layers import linear_init, linear, apply_rope, apply_mrope, rmsnorm_init, rmsnorm
 from ..sharding.hints import shard_hint
+from ..sharding.compat import get_abstract_mesh
 
 NEG_INF = -1e30
 
@@ -69,7 +70,7 @@ def _decode_grouped(q, k, v, *, scale, causal, q_positions, k_positions,
     b, hq, _, dh = q.shape
     kvh = k.shape[1]
     g = hq // kvh
-    am = jax.sharding.get_abstract_mesh()
+    am = get_abstract_mesh()
     seq_ok = (not am.empty and "model" in am.axis_names
               and k.shape[2] % am.shape["model"] == 0)
     if seq_ok:
@@ -136,7 +137,7 @@ def chunked_attention(q, k, v, *, scale: float, causal: bool = True,
     # the old unconditional head hint silently replicated S, which forced a
     # 15 GB fp32 all-gather of the whole KV cache per layer per decode step
     # on arctic-480b (529 GB/chip/step; §Perf B2).
-    am0 = jax.sharding.get_abstract_mesh()
+    am0 = get_abstract_mesh()
     tp = am0.shape["model"] if (not am0.empty and "model" in am0.axis_names) \
         else 1
     if g > 1:
@@ -159,7 +160,7 @@ def chunked_attention(q, k, v, *, scale: float, causal: bool = True,
     # and drop the chunk loop: per-chip score memory is already cut TP-fold
     # by the seq sharding, and a while loop would re-gather K/V from its
     # carry every iteration (+570 GB of all-gather measured; §Perf C1/C2).
-    am = jax.sharding.get_abstract_mesh()
+    am = get_abstract_mesh()
     # (measured both ways for hymba's windowed unrolled layers: keeping the
     # chunk loop bounds peak at 32.4 GB but costs 2x the bound (40.2 s vs
     # 19.6 s); both exceed 16 GB, so we take the better bound and list the
@@ -339,7 +340,7 @@ def attn_apply(p, x, cfg, *, positions, cache=None, cache_pos=None,
     # fallback XLA shards q-seq just 2-way for e.g. smollm's 15 heads on a
     # 16-way axis => 8x redundant score compute + replicated score memory
     # (§Perf iteration C1).
-    am = jax.sharding.get_abstract_mesh()
+    am = get_abstract_mesh()
     heads_divide = (not am.empty and "model" in am.axis_names
                     and cfg.n_heads % am.shape["model"] == 0)
     if s == 1:

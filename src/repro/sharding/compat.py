@@ -1,0 +1,56 @@
+"""JAX-version compatibility for mesh APIs.
+
+The repo targets the current mesh API (``jax.set_mesh``,
+``jax.sharding.get_abstract_mesh``, size/name ``AbstractMesh``); older
+releases (<= 0.4.x) spell these differently or not at all. Everything that
+touches a mesh context goes through this module so model code stays
+version-agnostic:
+
+  * ``get_abstract_mesh()`` — the ambient mesh as an object with ``.empty``,
+    ``.axis_names`` and ``.shape`` (a name->size mapping). On old JAX this is
+    the physical mesh installed by the ``Mesh`` context manager.
+  * ``set_mesh(mesh)``      — context manager activating ``mesh``.
+  * ``abstract_mesh(axis_sizes, axis_names)`` — devices-free mesh for
+    rule-level tests, covering both AbstractMesh constructor signatures.
+"""
+from __future__ import annotations
+
+import jax
+
+_HAS_GET_ABSTRACT = hasattr(jax.sharding, "get_abstract_mesh")
+_HAS_SET_MESH = hasattr(jax, "set_mesh")
+
+
+class _EmptyMesh:
+    """Stand-in for "no mesh active" matching the AbstractMesh surface."""
+    empty = True
+    axis_names = ()
+    shape = {}
+
+
+def get_abstract_mesh():
+    """The mesh installed by the innermost ``set_mesh`` (never None)."""
+    if _HAS_GET_ABSTRACT:
+        return jax.sharding.get_abstract_mesh()
+    from jax._src import mesh as mesh_lib
+    pm = mesh_lib.thread_resources.env.physical_mesh
+    if pm.empty:
+        return _EmptyMesh()
+    return pm
+
+
+def set_mesh(mesh):
+    """``jax.set_mesh`` where available; else the Mesh context manager (the
+    pre-0.5 spelling with identical scoping semantics)."""
+    if _HAS_SET_MESH:
+        return jax.set_mesh(mesh)
+    return mesh  # jax.sharding.Mesh is itself a context manager
+
+
+def abstract_mesh(axis_sizes, axis_names):
+    """AbstractMesh(sizes, names) across both constructor signatures."""
+    try:
+        return jax.sharding.AbstractMesh(tuple(axis_sizes), tuple(axis_names))
+    except TypeError:
+        return jax.sharding.AbstractMesh(
+            tuple(zip(axis_names, axis_sizes)))

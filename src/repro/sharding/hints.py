@@ -16,9 +16,11 @@ import math
 import jax
 from jax.sharding import PartitionSpec as P
 
+from .compat import get_abstract_mesh
+
 
 def shard_hint(x, *dims):
-    am = jax.sharding.get_abstract_mesh()
+    am = get_abstract_mesh()
     if am.empty:
         return x
     names = am.axis_names

@@ -15,6 +15,7 @@ import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from ..nn.module import map_with_path
+from .compat import abstract_mesh  # noqa: F401  (re-export for rule tests)
 
 
 def dp_axes(mesh: Mesh):

@@ -4,7 +4,6 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.core import lif, spike, unified
 from repro.core.spikformer import (SpikformerConfig, init, apply, loss_fn,
@@ -15,9 +14,9 @@ from repro.core.spikformer import (SpikformerConfig, init, apply, loss_fn,
 # spike packing
 # ---------------------------------------------------------------------------
 
-@settings(max_examples=20, deadline=None)
-@given(seed=st.integers(0, 2**31 - 1), n=st.integers(1, 16))
-def test_pack_unpack_roundtrip(seed, n):
+@pytest.mark.parametrize("seed", range(10))
+def test_pack_unpack_roundtrip(seed):
+    n = int(np.random.default_rng(seed).integers(1, 17))
     bits = (jax.random.uniform(jax.random.PRNGKey(seed), (3, 8 * n)) < 0.5)
     packed = spike.pack_bits(bits.astype(jnp.float32))
     assert packed.shape == (3, n) and packed.dtype == jnp.uint8
@@ -87,8 +86,7 @@ def test_tflif_scan_equals_stepwise():
 # BN folding — the TFLIF merge
 # ---------------------------------------------------------------------------
 
-@settings(max_examples=20, deadline=None)
-@given(seed=st.integers(0, 2**31 - 1))
+@pytest.mark.parametrize("seed", range(10))
 def test_fold_bn_exact(seed):
     """BN(x @ k + b) == x @ k' + b' after folding (inference stats)."""
     ks = jax.random.split(jax.random.PRNGKey(seed), 4)

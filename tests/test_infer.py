@@ -1,0 +1,206 @@
+"""Packed-bit inference parity: for each of the four unified dataflows
+(WSSL/ZSC/SSSC/STDP) the packed path must match the ``core.unified`` float
+reference BIT-EXACTLY on random binary/uint8 inputs — spikes are binary, so
+no tolerance — including the T-fold and the SSSC bit-plane 2^k bookkeeping.
+Plus: InferenceSession end-to-end equality, static-shape batching, and the
+micro-batching serve engine."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import unified
+from repro.core.lif import tflif
+from repro.core.spike import (pack_timesteps, unpack_timesteps,
+                              space_to_depth)
+from repro.core.spikformer import (SpikformerConfig, init, apply,
+                                   fold_inference_params, forward_folded)
+from repro.infer import FloatBackend, PackedBackend, InferenceSession
+from repro.kernels import ops
+
+
+def exact(a, b):
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def bern(key, shape, p=0.3):
+    return (jax.random.uniform(key, shape) < p).astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# per-dataflow parity (packed entry points vs core.unified, bit-exact)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed", range(5))
+@pytest.mark.parametrize("t", [1, 4, 8])
+def test_wssl_packed_parity(seed, t):
+    """Temporal T-fold: packed per-plane matmul == float wssl, exactly."""
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    s = bern(ks[0], (t, 2, 10, 16))
+    w = jax.random.normal(ks[1], (16, 8))
+    b = jax.random.normal(ks[2], (8,))
+    exact(ops.spike_linear(pack_timesteps(s), w, b, t=t),
+          unified.wssl(s, w, b))
+
+
+@pytest.mark.parametrize("seed", range(3))
+def test_zsc_packed_parity(seed):
+    """Space-to-depth on packed bytes == space-to-depth on spike planes."""
+    ks = jax.random.split(jax.random.PRNGKey(seed), 2)
+    s = bern(ks[0], (4, 2, 8, 8, 3), 0.4)
+    kern = jax.random.normal(ks[1], (2, 2, 3, 5))
+    want = unified.zsc(s, kern)
+    got = ops.spike_linear(space_to_depth(pack_timesteps(s), 2),
+                           kern.reshape(-1, 5), t=4)
+    exact(got, want)
+
+
+@pytest.mark.parametrize("seed", range(5))
+def test_sssc_packed_parity(seed):
+    """Bit-plane 2^k bookkeeping: shift-and-sum over uint8 value planes ==
+    float sssc, exactly (the uint8 tensor IS the packing)."""
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    img = jax.random.randint(ks[0], (2, 8, 8, 3), 0, 256, jnp.uint8)
+    kern = jax.random.normal(ks[1], (2, 2, 3, 4))
+    bias = jax.random.normal(ks[2], (4,))
+    got = ops.sssc_linear(space_to_depth(img, 2), kern.reshape(-1, 4), bias)
+    exact(got, unified.sssc(img, kern, bias))
+
+
+@pytest.mark.parametrize("seed", range(5))
+@pytest.mark.parametrize("t", [1, 4, 8])
+def test_stdp_packed_parity(seed, t):
+    """Softmax-free attention on packed spikes == float stdp. Binary q/k/v
+    make every score an exact integer, so associativity cannot break this."""
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q, k, v = [bern(kk, (t, 1, 2, 32, 16)) for kk in ks]
+    got = ops.stdp_attention_packed(pack_timesteps(q), pack_timesteps(k),
+                                    pack_timesteps(v), t=t, scale=0.125)
+    exact(got, unified.stdp(q, k, v, scale=0.125))
+
+
+@pytest.mark.parametrize("seed", range(5))
+def test_tflif_pack_parity(seed):
+    """Packed TFLIF output bits == the differentiable training LIF spikes."""
+    ks = jax.random.split(jax.random.PRNGKey(seed), 2)
+    acc = jax.random.normal(ks[0], (4, 2, 10, 8)) * 2.0
+    bias = jax.random.normal(ks[1], (8,)) * 0.5
+    exact(ops.tflif_pack(acc, bias), pack_timesteps(tflif(acc + bias)))
+
+
+def test_batched_entry_points_pallas_route():
+    """The forced-Pallas (interpret) route of the batched packed entry points
+    agrees with the CPU oracle route (tolerance: blocked accumulation)."""
+    ks = jax.random.split(jax.random.PRNGKey(2), 3)
+    s = bern(ks[0], (4, 2, 6, 16))
+    w = jax.random.normal(ks[1], (16, 8))
+    b = jax.random.normal(ks[2], (8,))
+    p = pack_timesteps(s)
+    np.testing.assert_allclose(
+        np.asarray(ops.spike_linear(p, w, b, t=4, pallas=True)),
+        np.asarray(ops.spike_linear(p, w, b, t=4)), rtol=1e-5, atol=1e-4)
+    acc = jax.random.normal(ks[0], (4, 2, 6, 8)) * 2.0
+    exact(ops.tflif_pack(acc, b, pallas=True), ops.tflif_pack(acc, b))
+    xu = jax.random.randint(ks[1], (2, 6, 12), 0, 256, jnp.uint8)
+    w2 = jax.random.normal(ks[2], (12, 5))
+    np.testing.assert_allclose(
+        np.asarray(ops.sssc_linear(xu, w2, pallas=True)),
+        np.asarray(ops.sssc_linear(xu, w2)), rtol=5e-3, atol=0.5)
+
+
+def test_pack_timesteps_roundtrip_and_bit_layout():
+    s = bern(jax.random.PRNGKey(0), (5, 3, 7), 0.5)
+    p = pack_timesteps(s)
+    assert p.dtype == jnp.uint8 and p.shape == (3, 7)
+    exact(unpack_timesteps(p, 5), s)
+    # bit t holds timestep t (tflif_ref convention); bits >= T are zero
+    for t in range(5):
+        exact((p >> t) & 1, s[t].astype(jnp.uint8))
+    assert int(jnp.max(p >> 5)) == 0
+
+
+def test_packed_iand_residual_matches_float():
+    ks = jax.random.split(jax.random.PRNGKey(1), 2)
+    a, b = bern(ks[0], (4, 50), 0.5), bern(ks[1], (4, 50), 0.5)
+    got = PackedBackend().residual(pack_timesteps(a), pack_timesteps(b),
+                                   "iand")
+    exact(got, pack_timesteps((1.0 - a) * b))
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: InferenceSession packed == float reference == training graph
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def small():
+    cfg = SpikformerConfig().scaled()
+    params = init(jax.random.PRNGKey(0), cfg)
+    img = jax.random.randint(jax.random.PRNGKey(1), (5, 32, 32, 3), 0, 256,
+                             jnp.uint8)
+    return cfg, params, img
+
+
+def test_session_packed_matches_reference_exactly(small):
+    cfg, params, img = small
+    packed = InferenceSession(params, cfg, backend="packed", batch_size=2)
+    ref = InferenceSession(params, cfg, backend="reference", batch_size=2)
+    lp, lr = packed.logits(img), ref.logits(img)
+    assert lp.shape == (5, cfg.num_classes)
+    exact(lp, lr)
+
+
+def test_session_close_to_training_graph(small):
+    """The folded inference graph tracks the unfolded train-mode graph (BN
+    folding is float-associative, so this one is allclose, not exact)."""
+    cfg, params, img = small
+    sess = InferenceSession(params, cfg, backend="packed", batch_size=5)
+    want, _ = apply(params, img, cfg, train=False)
+    np.testing.assert_allclose(np.asarray(sess.logits(img)),
+                               np.asarray(want), rtol=1e-3, atol=1e-3)
+
+
+def test_session_static_batching_invariant(small):
+    """Any request size through the fixed-shape step == one whole-batch run
+    (pad rows must not leak into real outputs)."""
+    cfg, params, img = small
+    sess = InferenceSession(params, cfg, backend="packed", batch_size=2)
+    whole = InferenceSession(params, cfg, backend="packed", batch_size=5)
+    exact(sess.logits(img), whole.logits(img))
+    exact(sess.logits(img[:1]), whole.logits(img)[:1])
+    labs = sess.classify(img)
+    assert labs.shape == (5,) and labs.dtype == jnp.int32
+
+
+def test_forward_folded_backends_agree(small):
+    """forward_folded (the core driver, below the session layer) produces
+    identical logits through the float and packed backends."""
+    cfg, params, img = small
+    folded = fold_inference_params(params, cfg)
+    got = forward_folded(folded, img, cfg, backend=PackedBackend())
+    want = forward_folded(folded, img, cfg, backend=FloatBackend())
+    exact(got, want)
+
+
+def test_packed_backend_rejects_add_residual(small):
+    cfg, params, img = small
+    import dataclasses
+    cfg_add = dataclasses.replace(cfg, residual="add")
+    sess = InferenceSession(params, cfg_add, backend="packed", batch_size=5,
+                            jit=False)
+    with pytest.raises(ValueError, match="binary"):
+        sess.logits(img)
+
+
+def test_serve_engine_matches_session(small):
+    """The micro-batching engine (images from different requests fused into
+    one step) classifies identically to a direct session call."""
+    from repro.launch.serve_spikformer import SpikformerEngine, ImageRequest
+    cfg, params, img = small
+    eng = SpikformerEngine(params, cfg, batch_size=4, backend="packed")
+    imgs = np.asarray(img)
+    eng.submit(ImageRequest(rid=0, images=imgs[:3]))
+    eng.submit(ImageRequest(rid=1, images=imgs[3:]))
+    done = sorted(eng.run(), key=lambda r: r.rid)
+    got = [lab for r in done for lab in r.labels]
+    want = np.asarray(eng.session.classify(imgs)).tolist()
+    assert got == want

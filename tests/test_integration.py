@@ -73,11 +73,12 @@ def test_moe_arch_trains(tmp_path):
 def test_engine_matches_sequential_generation():
     from repro.configs.base import get_config
     from repro.launch.serve import Engine, Request
+    from repro.sharding.compat import set_mesh
     from repro.nn import transformer as T
 
     cfg = get_config("smollm-360m").reduced()
     mesh = jax.make_mesh((1, 1), ("data", "model"))
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         # fp32 end-to-end: greedy argmax on an UNTRAINED model is otherwise
         # numerically unstable (logit gaps < bf16 eps flip between batchings)
         eng = Engine(cfg, slots=2, cache_len=64, seed=0,

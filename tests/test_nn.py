@@ -6,7 +6,6 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.configs.base import ArchConfig
 from repro.nn import layers
@@ -238,8 +237,7 @@ def test_moe_capacity_drops_overflow():
     assert (rows == 0).sum() >= 14  # 16 tokens, <=2 slots
 
 
-@settings(max_examples=10, deadline=None)
-@given(seed=st.integers(0, 2**31 - 1))
+@pytest.mark.parametrize("seed", range(8))
 def test_moe_gates_bounded(seed):
     cfg = mini_cfg(family="moe", n_experts=4, top_k=2, moe_d_ff=32)
     p = moe_init(jax.random.PRNGKey(0), cfg)

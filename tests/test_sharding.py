@@ -11,6 +11,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.configs.base import get_config
 from repro.nn import transformer as T
 from repro.sharding import rules
+from repro.sharding.compat import set_mesh
 from repro.sharding.hints import shard_hint
 from repro.launch import steps
 
@@ -18,9 +19,9 @@ from repro.launch import steps
 def fake_mesh(data=4, model=2, pod=None):
     """An abstract mesh over fake devices (no allocation) for rule tests."""
     if pod:
-        return jax.sharding.AbstractMesh((pod, data, model),
-                                         ("pod", "data", "model"))
-    return jax.sharding.AbstractMesh((data, model), ("data", "model"))
+        return rules.abstract_mesh((pod, data, model),
+                                   ("pod", "data", "model"))
+    return rules.abstract_mesh((data, model), ("data", "model"))
 
 
 # AbstractMesh lacks .devices; spec_for only uses .shape/.axis_names, so this
@@ -98,7 +99,7 @@ def test_sharded_train_step_matches_unsharded():
     plain = steps.make_train_step(cfg, ts)
     p2, o2, m2 = jax.jit(plain)(params, opt, batch)
 
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         # donate_argnums consumes params/opt — run the plain step first
         step_sharded, _, _ = steps.jit_train_step(cfg, mesh, ts, batch_shapes)
         p1, o1, m1 = step_sharded(params, opt, batch)
