@@ -1,17 +1,22 @@
 """Inference throughput: packed-bit datapath vs float reference, end to end.
 
 Times the jit-compiled fixed-batch ``InferenceSession`` forward for both
-backends on the same reduced Spikformer config and random uint8 images, and
-emits ONE JSON record (stdout, and --out FILE) so successive PRs accumulate a
-perf trajectory. Also reports the activation-traffic ratio (the 8x/T-fold
-packing win that holds on any backend) and verifies the two paths agree
-bit-exactly before timing — a benchmark of a wrong path is worthless.
+backends over a sweep of (timesteps, weight_dtype) points — by default
+T in {4, 16} x {float32, int8}, so the perf trajectory captures both the
+plane-group loop overhead (T=16 -> 2 uint8 groups per neuron) and the int8
+scale-folded route — and emits ONE JSON record (stdout, and --out FILE) so
+successive PRs accumulate a perf trajectory. Also reports the
+activation-traffic ratio (the 8x/T-fold packing win that holds on any
+backend) and verifies the two paths agree bit-exactly before timing — a
+benchmark of a wrong path is worthless.
 
   PYTHONPATH=src python benchmarks/infer_bench.py [--batch-size 8] [--out f.json]
+  PYTHONPATH=src python benchmarks/infer_bench.py --smoke     # tiny, 1 repeat
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import json
 import platform
 import time
@@ -20,18 +25,19 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.spike import num_plane_groups
 from repro.core.spikformer import SpikformerConfig, init as spik_init
 from repro.infer import InferenceSession, benchmark_session
 
 
-def run(*, batch_size: int = 8, batches: int = 4, seed: int = 0,
-        img_size: int = 32, dim: int = 64, depth: int = 2) -> dict:
-    cfg = SpikformerConfig().scaled(img_size=img_size, dim=dim, depth=depth)
-    params = spik_init(jax.random.PRNGKey(seed), cfg)
-
+def run_point(params, cfg, *, timesteps: int, weight_dtype: str,
+              batch_size: int, batches: int, seed: int) -> dict:
+    """One sweep point: both backends at (timesteps, weight_dtype)."""
+    cfg = dataclasses.replace(cfg, timesteps=timesteps)
     sessions = {
         name: InferenceSession(params, cfg, backend=name,
-                               batch_size=batch_size)
+                               batch_size=batch_size,
+                               weight_dtype=weight_dtype)
         for name in ("packed", "reference")
     }
 
@@ -44,23 +50,52 @@ def run(*, batch_size: int = 8, batches: int = 4, seed: int = 0,
 
     results = {name: benchmark_session(s, batches=batches, seed=seed + 2)
                for name, s in sessions.items()}
-
-    t = cfg.timesteps
-    record = {
-        "bench": "infer_spikformer",
-        "backend_platform": jax.default_backend(),
-        "machine": platform.machine(),
-        "config": {"img_size": cfg.img_size, "dim": cfg.dim,
-                   "depth": cfg.depth, "heads": cfg.heads, "timesteps": t,
-                   "batch_size": batch_size, "batches": batches},
+    return {
+        "timesteps": timesteps,
+        "weight_dtype": weight_dtype,
+        "plane_groups": num_plane_groups(timesteps),
         "bit_exact": exact,
         "packed": results["packed"],
         "reference": results["reference"],
         "packed_speedup": round(results["packed"]["images_per_s"]
                                 / results["reference"]["images_per_s"], 3),
         # storage bytes per activation element between layers:
-        # float spikes carry T fp32 values, packed carries 1 uint8
-        "activation_traffic_ratio": 4.0 * t,
+        # float spikes carry T fp32 values, packed carries ceil(T/8) uint8
+        "activation_traffic_ratio": round(
+            4.0 * timesteps / num_plane_groups(timesteps), 2),
+    }
+
+
+def run(*, batch_size: int = 8, batches: int = 4, seed: int = 0,
+        img_size: int = 32, dim: int = 64, depth: int = 2,
+        sweep=((4, "float32"), (4, "int8"), (16, "float32"), (16, "int8")),
+        ) -> dict:
+    cfg = SpikformerConfig().scaled(img_size=img_size, dim=dim, depth=depth)
+    params = spik_init(jax.random.PRNGKey(seed), cfg)
+
+    points = [run_point(params, cfg, timesteps=t, weight_dtype=wd,
+                        batch_size=batch_size, batches=batches, seed=seed)
+              for t, wd in sweep]
+
+    # PR-1-compatible trajectory fields come from the (4, float32) point
+    # when the sweep carries one, else the first point
+    base = next((p for p in points
+                 if p["timesteps"] == 4 and p["weight_dtype"] == "float32"),
+                points[0])
+    record = {
+        "bench": "infer_spikformer",
+        "backend_platform": jax.default_backend(),
+        "machine": platform.machine(),
+        "config": {"img_size": cfg.img_size, "dim": cfg.dim,
+                   "depth": cfg.depth, "heads": cfg.heads,
+                   "timesteps": base["timesteps"], "batch_size": batch_size,
+                   "batches": batches},
+        "bit_exact": all(p["bit_exact"] for p in points),
+        "packed": base["packed"],
+        "reference": base["reference"],
+        "packed_speedup": base["packed_speedup"],
+        "activation_traffic_ratio": base["activation_traffic_ratio"],
+        "sweep": points,
         "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
     }
     return record
@@ -68,19 +103,33 @@ def run(*, batch_size: int = 8, batches: int = 4, seed: int = 0,
 
 def main(argv=None):
     ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("--batch-size", type=int, default=8)
-    ap.add_argument("--batches", type=int, default=4)
+    # None = "not passed": lets --smoke shrink only unspecified values while
+    # an explicit flag always wins
+    ap.add_argument("--batch-size", type=int, default=None, help="default 8")
+    ap.add_argument("--batches", type=int, default=None, help="default 4")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny config, 1 repeat — CI gate that the sweep "
+                         "runs and stays bit-exact, not a timing")
     ap.add_argument("--out", default=None, help="also append JSON to FILE")
     args = ap.parse_args(argv)
 
-    record = run(batch_size=args.batch_size, batches=args.batches,
-                 seed=args.seed)
+    small = (2, 1) if args.smoke else (8, 4)
+    kw = dict(batch_size=small[0] if args.batch_size is None
+              else args.batch_size,
+              batches=small[1] if args.batches is None else args.batches,
+              seed=args.seed)
+    if args.smoke:
+        kw.update(img_size=16, dim=32, depth=1)
+
+    record = run(**kw)
     line = json.dumps(record)
     print(line)
     if args.out:
         with open(args.out, "a") as f:
             f.write(line + "\n")
+    if not record["bit_exact"]:
+        raise SystemExit("packed/reference logits diverged — see record")
     return record
 
 

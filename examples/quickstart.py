@@ -32,10 +32,11 @@ from repro.core.lif import fold_bn, bn_init
 kern = jax.random.normal(jax.random.PRNGKey(3), (96, 32))
 bn = bn_init(32)
 kf, bf = fold_bn(kern, None, bn)
-acc = jax.random.normal(jax.random.PRNGKey(4), (4, 32 * 64)) * 2
+acc = jax.random.normal(jax.random.PRNGKey(4), (12, 32 * 64)) * 2
 packed_out = ops.tflif_fused(acc, jnp.tile(bf, 64))
 print(f"3) TFLIF: {acc.shape} accumulators -> {packed_out.shape} uint8 "
-      f"(bit t = spike at timestep t; BN never ran as a layer)")
+      f"plane groups (bit j of group g = timestep 8g+j; BN never ran as a "
+      f"layer; T=12 -> ceil(12/8)=2 groups, membrane carried across)")
 
 # --- 4. STDP: softmax-free attention, V consumed as produced -----------------
 q = (jax.random.uniform(jax.random.PRNGKey(5), (8, 256, 64)) < 0.25
@@ -54,4 +55,14 @@ img = jax.random.randint(jax.random.PRNGKey(7), (2, 32, 32, 3), 0, 256,
 logits, _ = apply(params, img, cfg)
 print(f"5) Spikformer V2 (reduced): image {img.shape} -> logits "
       f"{logits.shape}, all inter-layer traffic binary spikes")
+
+# --- 6. packed inference: any T, int8 weights --------------------------------
+from repro.infer import InferenceSession
+
+cfg16 = cfg.scaled(timesteps=16)           # T=16 -> 2 plane groups
+sess = InferenceSession(params, cfg16, backend="packed", batch_size=2,
+                        weight_dtype="int8")
+print(f"6) packed int8 inference at T=16: logits {sess.logits(img).shape} "
+      f"(uint8 plane-group activations, int8 weights, scale folded into "
+      f"the LIF threshold)")
 print("quickstart OK")

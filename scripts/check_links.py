@@ -1,0 +1,55 @@
+#!/usr/bin/env python3
+"""Fail on broken *relative* links in the repo's markdown docs.
+
+Scans README.md and docs/*.md (plus any extra paths given on argv) for
+``[text](target)`` links, resolves relative targets against the containing
+file, and exits 1 listing every target that does not exist. http(s)/mailto
+links and pure #anchors are skipped — this is a docs-rot gate for the file
+tree we control, not a network checker.
+
+  python scripts/check_links.py [extra.md ...]
+"""
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+SKIP_PREFIXES = ("http://", "https://", "mailto:", "#")
+
+
+def targets(md_path: pathlib.Path):
+    for m in LINK_RE.finditer(md_path.read_text()):
+        raw = m.group(1)
+        if raw.startswith(SKIP_PREFIXES):
+            continue
+        yield raw, (md_path.parent / raw.split("#")[0]).resolve()
+
+
+def main(argv):
+    root = pathlib.Path(__file__).resolve().parent.parent
+    files = [root / "README.md", *sorted((root / "docs").glob("*.md")),
+             *(pathlib.Path(a).resolve() for a in argv)]
+    broken = []
+    checked = 0
+    for f in files:
+        if not f.exists():
+            broken.append((f, "(file itself missing)"))
+            continue
+        for raw, resolved in targets(f):
+            checked += 1
+            if not resolved.exists():
+                rel = f.relative_to(root) if f.is_relative_to(root) else f
+                broken.append((rel, raw))
+    if broken:
+        for f, raw in broken:
+            print(f"BROKEN LINK in {f}: {raw}", file=sys.stderr)
+        return 1
+    print(f"check_links: {checked} relative links OK "
+          f"across {len(files)} files")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:]))

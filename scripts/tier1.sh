@@ -23,16 +23,41 @@ echo "$OUT"
 
 TAIL=$(echo "$OUT" | tail -n 3)
 ERRORS=$(echo "$OUT" | grep -c "^ERROR ")
+
+# docs can't silently rot: every relative link in README.md / docs/*.md
+# must resolve to a real file
+python scripts/check_links.py src/repro/infer/README.md
+LINKS=$?
+
+# the benchmark sweep (T in {4,16} x {float32,int8}) must run and stay
+# bit-exact — a tiny 1-repeat smoke, not a timing. Skipped when pytest
+# already failed: no point compiling 8 sessions to decorate a red build.
+BENCH=skipped
+if [[ $CODE -eq 0 ]]; then
+    PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+        python benchmarks/infer_bench.py --smoke > /dev/null
+    BENCH=$?
+fi
+
 echo
 echo "=== tier1 summary ==="
 echo "  result line : $(echo "$TAIL" | grep -E '(passed|failed|error)' | tail -n 1)"
 echo "  collect errs: $ERRORS"
+echo "  doc links   : $([[ $LINKS -eq 0 ]] && echo OK || echo BROKEN)"
+echo "  bench smoke : $([[ "$BENCH" == 0 ]] && echo OK || echo "$BENCH")"
+# pytest problems first — the doc/bench gates must never mask a red suite
 if [[ "$ERRORS" -gt 0 ]]; then
     echo "  status      : FAIL (collection errors — tests silently missing)"
     exit 2
-elif [[ $CODE -eq 0 ]]; then
-    echo "  status      : PASS"
-else
+elif [[ $CODE -ne 0 ]]; then
     echo "  status      : FAIL (exit $CODE)"
+    exit $CODE
+elif [[ $LINKS -ne 0 ]]; then
+    echo "  status      : FAIL (broken doc links)"
+    exit 3
+elif [[ "$BENCH" != 0 ]]; then
+    echo "  status      : FAIL (infer_bench --smoke)"
+    exit 4
 fi
-exit $CODE
+echo "  status      : PASS"
+exit 0

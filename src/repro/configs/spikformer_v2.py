@@ -4,6 +4,8 @@ so it lives outside the (arch x LM-shape) dry-run grid; its production
 instantiation is the full 224x224 ImageNet config below and its launchers
 are examples/train_spikformer.py + the core/spikformer module.
 """
+import dataclasses
+
 from ..core.spikformer import SpikformerConfig
 
 # full paper config: 8 encoder blocks, dim 512, T=4, 224px, 1000 classes
@@ -11,3 +13,8 @@ CONFIG = SpikformerConfig()
 
 # CPU-scale smoke config (used by tests/examples)
 REDUCED = CONFIG.scaled()
+
+# Long-timestep variants (Spike-driven Transformer V2 / Spikingformer
+# workload shapes): T=16 -> ceil(16/8)=2 packed plane groups per neuron.
+CONFIG_T16 = dataclasses.replace(CONFIG, timesteps=16)
+REDUCED_T16 = REDUCED.scaled(timesteps=16)

@@ -45,15 +45,17 @@ def _spike_bwd(u, g):
 spike_fn.defvjp(_spike_fwd, _spike_bwd)
 
 
-def lif_step(v, x, *, tau: float = TAU, v_th: float = V_TH):
-    """One LIF timestep. Returns (v_next, spike)."""
+def lif_step(v, x, *, tau: float = TAU, v_th=V_TH):
+    """One LIF timestep. Returns (v_next, spike). ``v_th`` may be a scalar
+    or a per-channel array broadcastable against x (the int8-weight route
+    folds its dequantization scale into the threshold as v_th/s)."""
     h = v + (x - v) / tau
     s = spike_fn(h - v_th)
     v_next = h * (1.0 - s)
     return v_next, s
 
 
-def tflif(x, *, tau: float = TAU, v_th: float = V_TH, time_axis: int = 0):
+def tflif(x, *, tau: float = TAU, v_th=V_TH, time_axis: int = 0):
     """Temporal-Fused LIF: input (T, ...) accumulator values -> (T, ...) spikes.
 
     The whole T axis is processed in one fused scan (T stays on-chip); pair with

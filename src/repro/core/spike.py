@@ -6,10 +6,13 @@ TPU-native analogue is *storage*: spikes live packed 8-per-uint8 in HBM (the
 VMEM. This is where the 8x activation-bandwidth saving comes from.
 
 Plane semantics:
-  * temporal packing  — the 8 bits are (T=4 timesteps x 2 tokens) or up to 8
-    timesteps: used by ZSC / WSSL / STDP. Each plane is an independent output.
+  * temporal packing  — the 8 bits of a byte are 8 consecutive timesteps:
+    used by ZSC / WSSL / STDP. Each plane is an independent output. For
+    T > 8 the packed tensor carries a leading *plane-group* axis of size
+    G = ceil(T/8); group g holds timesteps 8g .. 8g+7.
   * bit-plane packing — the 8 bits are the binary expansion of a uint8 pixel:
-    used by SSSC. Planes are summed with weights 2^k.
+    used by SSSC. Planes are summed with weights 2^k (always exactly 8
+    planes, so never more than one group).
 """
 from __future__ import annotations
 
@@ -38,25 +41,42 @@ def unpack_bits(x, axis: int = -1, *, count: int = 8, dtype=jnp.float32):
     return jnp.moveaxis(bits, -1, axis)
 
 
+def num_plane_groups(t: int) -> int:
+    """Number of uint8 plane groups needed for a T-timestep spike train."""
+    assert t >= 1, t
+    return -(-t // 8)
+
+
 def pack_timesteps(spikes, *, time_axis: int = 0):
     """Temporal packing for the inference datapath: a (T, ...) binary spike
-    train becomes one uint8 per neuron with bit t = the timestep-t spike
-    (T <= 8, matching ``kernels.ref.tflif_ref`` output). The T axis is
-    consumed; all other axes keep their layout."""
+    train becomes ``G = ceil(T/8)`` bytes per neuron, returned with a leading
+    *plane-group* axis: output (G, ...) uint8 where bit j of group g is the
+    spike at timestep ``8*g + j`` (matching ``kernels.ref.tflif_ref`` output).
+    Bits past T-1 in the last group are zero. The T axis is consumed; all
+    other axes keep their layout."""
     t = spikes.shape[time_axis]
-    assert t <= 8, f"temporal packing holds at most 8 timesteps, got {t}"
+    g = num_plane_groups(t)
     x = jnp.moveaxis(spikes, time_axis, 0).astype(jnp.uint8)
-    shifts = jnp.arange(t, dtype=jnp.uint8).reshape((t,) + (1,) * (x.ndim - 1))
-    return jnp.bitwise_or.reduce(x << shifts, axis=0)
+    pad = g * 8 - t
+    if pad:
+        x = jnp.concatenate(
+            [x, jnp.zeros((pad, *x.shape[1:]), jnp.uint8)], axis=0)
+    x = x.reshape(g, 8, *x.shape[1:])
+    shifts = jnp.arange(8, dtype=jnp.uint8).reshape(
+        (1, 8) + (1,) * (x.ndim - 2))
+    return jnp.bitwise_or.reduce(x << shifts, axis=1)
 
 
 def unpack_timesteps(packed, t: int, *, time_axis: int = 0,
                      dtype=jnp.float32):
-    """Inverse of ``pack_timesteps``: uint8 (...,) -> (T, ...) binary planes
-    inserted at ``time_axis`` (LSB = timestep 0)."""
-    assert t <= 8, t
-    planes = (packed[None, ...] >> jnp.arange(t, dtype=jnp.uint8).reshape(
-        (t,) + (1,) * packed.ndim)) & jnp.uint8(1)
+    """Inverse of ``pack_timesteps``: (G, ...) uint8 plane groups -> (T, ...)
+    binary planes inserted at ``time_axis`` (bit j of group g = timestep
+    ``8*g + j``)."""
+    g = packed.shape[0]
+    assert g == num_plane_groups(t), (g, t)
+    bits = (packed[:, None, ...] >> jnp.arange(8, dtype=jnp.uint8).reshape(
+        (1, 8) + (1,) * (packed.ndim - 1))) & jnp.uint8(1)
+    planes = bits.reshape(g * 8, *packed.shape[1:])[:t]
     return jnp.moveaxis(planes.astype(dtype), 0, time_axis)
 
 

@@ -47,11 +47,14 @@ class SpikformerConfig:
         side = self.img_size // (2 ** len(self.scs_channels))
         return side * side
 
-    def scaled(self, *, img_size=32, dim=64, depth=2, heads=2, classes=10):
-        """Reduced config for CPU smoke tests."""
+    def scaled(self, *, img_size=32, dim=64, depth=2, heads=2, classes=10,
+               timesteps=None):
+        """Reduced config for CPU smoke tests. ``timesteps`` overrides T
+        (any T >= 1 — the packed datapath uses ceil(T/8) plane groups)."""
         return dataclasses.replace(
             self, img_size=img_size, dim=dim, depth=depth, heads=heads,
-            num_classes=classes, scs_channels=(8, 16, 32, dim))
+            num_classes=classes, scs_channels=(8, 16, 32, dim),
+            timesteps=self.timesteps if timesteps is None else timesteps)
 
 
 def init(key, cfg: SpikformerConfig, dtype=jnp.float32):
@@ -208,32 +211,39 @@ def forward_folded(folded, images_u8, cfg: SpikformerConfig, *, backend):
 
     ``backend`` implements the dataflow ops over an opaque activation type;
     the implementations live in ``repro.infer.backends`` (float {0,1} spike
-    trains for the differentiable reference, packed uint8 bit planes for the
-    hardware-shaped path). Returns (B, num_classes) logits.
+    trains for the differentiable reference, packed uint8 plane groups for
+    the hardware-shaped path). ``folded`` may be the float tree from
+    ``fold_inference_params`` or its int8 quantization
+    (``infer.quant.quantize_folded``) — layers carrying a ``scale`` leaf are
+    dispatched with it. Returns (B, num_classes) logits.
     """
     t = cfg.timesteps
 
+    def wssl(z, layer):
+        return backend.wssl_lif(z, layer["kernel"], layer["bias"], t=t,
+                                scale=layer.get("scale"))
+
     c0 = folded["scs"]["conv0"]
-    x = backend.sssc_lif(images_u8, c0["kernel"], c0["bias"], t=t)
+    x = backend.sssc_lif(images_u8, c0["kernel"], c0["bias"], t=t,
+                         scale=c0.get("scale"))
     for i in range(1, len(cfg.scs_channels)):
         ci = folded["scs"][f"conv{i}"]
-        x = backend.zsc_lif(x, ci["kernel"], ci["bias"], t=t)
+        x = backend.zsc_lif(x, ci["kernel"], ci["bias"], t=t,
+                            scale=ci.get("scale"))
     x = backend.to_tokens(x)
 
     for i in range(cfg.depth):
         blk = folded["blocks"][f"b{i}"]
         ssa, mlp = blk["ssa"], blk["mlp"]
-        q = backend.wssl_lif(x, ssa["wq"]["kernel"], ssa["wq"]["bias"], t=t)
-        k = backend.wssl_lif(x, ssa["wk"]["kernel"], ssa["wk"]["bias"], t=t)
-        v = backend.wssl_lif(x, ssa["wv"]["kernel"], ssa["wv"]["bias"], t=t)
+        q = wssl(x, ssa["wq"])
+        k = wssl(x, ssa["wk"])
+        v = wssl(x, ssa["wv"])
         att = backend.stdp_lif(q, k, v, heads=cfg.heads,
                                scale=cfg.attn_scale, t=t)
-        att = backend.wssl_lif(att, ssa["wo"]["kernel"], ssa["wo"]["bias"],
-                               t=t)
+        att = wssl(att, ssa["wo"])
         x = backend.residual(att, x, cfg.residual)
-        s1 = backend.wssl_lif(x, mlp["fc1"]["kernel"], mlp["fc1"]["bias"], t=t)
-        s2 = backend.wssl_lif(s1, mlp["fc2"]["kernel"], mlp["fc2"]["bias"],
-                              t=t)
+        s1 = wssl(x, mlp["fc1"])
+        s2 = wssl(s1, mlp["fc2"])
         x = backend.residual(s2, x, cfg.residual)
 
     rate = backend.rate(x, t=t)                         # (B, D)

@@ -1,7 +1,9 @@
 """Packed-bit Spikformer inference: the bridge from the float training
 reference to VESTA's unified-PE datapath. See README.md in this directory."""
 from .backends import FloatBackend, PackedBackend, get_backend
+from .quant import quantize_folded, quantize_layer
 from .session import InferenceSession, benchmark_session
 
 __all__ = ["FloatBackend", "PackedBackend", "get_backend",
-           "InferenceSession", "benchmark_session"]
+           "InferenceSession", "benchmark_session",
+           "quantize_folded", "quantize_layer"]

@@ -7,13 +7,20 @@ four unified dataflows:
   FloatBackend  — spikes are {0,1} float32 tensors with an explicit leading T
                   axis, every op runs through ``core.unified`` (the training
                   reference). Activation shapes: (T, B, H, W, C) / (T, B, N, D).
-  PackedBackend — spikes are packed uint8, one byte = T<=8 timesteps of one
-                  neuron (bit t = timestep t), dispatched through the batched
-                  packed entry points in ``kernels.ops`` (Pallas on TPU, the
-                  mirrored-reshape CPU oracle elsewhere). Activation shapes:
-                  (B, H, W, C) / (B, N, D) uint8 — 8x (x 32/T) less
-                  inter-layer traffic, the paper's Small-Input/Output-SRAM
-                  packing.
+  PackedBackend — spikes are packed uint8 *plane groups*: a leading axis of
+                  G = ceil(T/8) bytes per neuron, bit j of group g = timestep
+                  8g+j, dispatched through the batched packed entry points in
+                  ``kernels.ops`` (Pallas on TPU, the mirrored-reshape CPU
+                  oracle elsewhere). Activation shapes: (G, B, H, W, C) /
+                  (G, B, N, D) uint8 — 8x (x 32/T) less inter-layer traffic,
+                  the paper's Small-Input/Output-SRAM packing, for ANY T.
+
+Every ``*_lif`` method takes an optional per-output-channel ``scale`` leaf
+(present when the folded tree was quantized by ``infer.quant``): the kernel
+is then int8 and the scale is folded into the LIF bias/threshold instead of
+the accumulator (see ``infer.quant`` for the math). FloatBackend applies the
+identical scale-folded ops to the dequantized-integer float graph, making it
+the bit-exact *emulation oracle* for the packed int8 route.
 
 The CPU route of PackedBackend performs operation-for-operation the same
 float32 arithmetic as FloatBackend (same reshapes, same dots, same reduction
@@ -25,7 +32,7 @@ from __future__ import annotations
 import jax.numpy as jnp
 
 from ..core import unified
-from ..core.lif import tflif
+from ..core.lif import V_TH, tflif
 from ..core.spike import (rate_decode, space_to_depth, unpack_timesteps)
 from ..kernels import ops
 
@@ -35,16 +42,30 @@ class FloatBackend:
 
     name = "reference"
 
-    def sssc_lif(self, images_u8, kernel, bias, *, t: int):
-        y = unified.sssc(images_u8, kernel, bias)       # (B, H/2, W/2, F)
+    @staticmethod
+    def _acc_and_vth(op, x, kernel, bias, scale):
+        """Pre-LIF accumulator and firing threshold for ``op(x, k, b)``.
+        int8 layers (``scale`` given) fold the per-channel scale into the
+        bias/threshold — the float emulation of exactly the packed int8
+        math."""
+        if scale is None:
+            return op(x, kernel, bias), V_TH
+        acc = op(x, kernel.astype(jnp.float32), None) + (bias / scale)
+        return acc, V_TH / scale
+
+    def sssc_lif(self, images_u8, kernel, bias, *, t: int, scale=None):
+        y, vth = self._acc_and_vth(unified.sssc, images_u8, kernel, bias,
+                                   scale)                # (B, H/2, W/2, F)
         y = jnp.broadcast_to(y[None], (t, *y.shape))    # image constant in T
-        return tflif(y)
+        return tflif(y, v_th=vth)
 
-    def zsc_lif(self, x, kernel, bias, *, t: int):
-        return tflif(unified.zsc(x, kernel, bias))
+    def zsc_lif(self, x, kernel, bias, *, t: int, scale=None):
+        y, vth = self._acc_and_vth(unified.zsc, x, kernel, bias, scale)
+        return tflif(y, v_th=vth)
 
-    def wssl_lif(self, x, kernel, bias, *, t: int):
-        return tflif(unified.wssl(x, kernel, bias))
+    def wssl_lif(self, x, kernel, bias, *, t: int, scale=None):
+        y, vth = self._acc_and_vth(unified.wssl, x, kernel, bias, scale)
+        return tflif(y, v_th=vth)
 
     def stdp_lif(self, q, k, v, *, heads: int, scale: float, t: int):
         tt, b, n, d = q.shape
@@ -71,7 +92,8 @@ class FloatBackend:
 
 
 class PackedBackend:
-    """Hardware-shaped backend: packed uint8 planes through ``kernels.ops``.
+    """Hardware-shaped backend: packed uint8 plane groups through
+    ``kernels.ops``.
 
     ``pallas=None`` auto-selects (Pallas on TPU, CPU oracle otherwise);
     pass True/False to force either route.
@@ -82,46 +104,62 @@ class PackedBackend:
     def __init__(self, *, pallas: bool | None = None):
         self.pallas = pallas
 
-    def sssc_lif(self, images_u8, kernel, bias, *, t: int):
+    def _lif(self, acc, bias, scale):
+        """acc (T, ...) -> (G, ...) packed; int8 layers fold their
+        per-channel scale into the bias/threshold, never the accumulator."""
+        if scale is None:
+            return ops.tflif_pack(acc, bias, pallas=self.pallas)
+        return ops.tflif_pack(acc, bias / scale, v_th=V_TH / scale,
+                              pallas=self.pallas)
+
+    @staticmethod
+    def _w(kernel, scale):
+        """How an int8 kernel enters the packed matmul (single spot)."""
+        return kernel if scale is None else kernel.astype(jnp.float32)
+
+    def sssc_lif(self, images_u8, kernel, bias, *, t: int, scale=None):
         x = space_to_depth(images_u8, 2)                # (B,H/2,W/2,4C) u8
-        acc = ops.sssc_linear(x, kernel, bias, pallas=self.pallas)
+        acc = ops.sssc_linear(x, self._w(kernel, scale), None,
+                              pallas=self.pallas)
         acc = jnp.broadcast_to(acc[None], (t, *acc.shape))
-        return ops.tflif_pack(acc, pallas=self.pallas)  # (B,H/2,W/2,F) u8
+        return self._lif(acc, bias, scale)              # (G,B,H/2,W/2,F) u8
 
-    def zsc_lif(self, x, kernel, bias, *, t: int):
-        acc = ops.spike_linear(space_to_depth(x, 2), kernel, bias, t=t,
+    def zsc_lif(self, x, kernel, bias, *, t: int, scale=None):
+        acc = ops.spike_linear(space_to_depth(x, 2), self._w(kernel, scale),
+                               None, t=t, pallas=self.pallas)
+        return self._lif(acc, bias, scale)
+
+    def wssl_lif(self, x, kernel, bias, *, t: int, scale=None):
+        acc = ops.spike_linear(x, self._w(kernel, scale), None, t=t,
                                pallas=self.pallas)
-        return ops.tflif_pack(acc, pallas=self.pallas)
-
-    def wssl_lif(self, x, kernel, bias, *, t: int):
-        acc = ops.spike_linear(x, kernel, bias, t=t, pallas=self.pallas)
-        return ops.tflif_pack(acc, pallas=self.pallas)
+        return self._lif(acc, bias, scale)
 
     def stdp_lif(self, q, k, v, *, heads: int, scale: float, t: int):
-        b, n, d = q.shape
+        g, b, n, d = q.shape
         dh = d // heads
 
         def to_heads(z):
-            return z.reshape(b, n, heads, dh).transpose(0, 2, 1, 3)
+            return z.reshape(g, b, n, heads, dh).transpose(0, 1, 3, 2, 4)
 
         acc = ops.stdp_attention_packed(
             to_heads(q), to_heads(k), to_heads(v), t=t, scale=scale,
             pallas=self.pallas)                         # (t, B, H, N, dh)
-        att = ops.tflif_pack(acc, pallas=self.pallas)   # (B, H, N, dh) u8
-        return att.transpose(0, 2, 1, 3).reshape(b, n, d)
+        att = ops.tflif_pack(acc, pallas=self.pallas)   # (G, B, H, N, dh) u8
+        return att.transpose(0, 1, 3, 2, 4).reshape(g, b, n, d)
 
     def residual(self, new, res, mode: str):
         if mode != "iand":
             raise ValueError(
                 "packed activations are strictly binary; residual mode "
                 f"{mode!r} requires the float reference backend")
-        # SEW IAND on packed bytes: (NOT new) AND res. Bits >= T are 0 in
-        # `res`, so the complement's high bits are masked off for free.
+        # SEW IAND on packed bytes, all plane groups at once: (NOT new) AND
+        # res. Bits >= T in the last group are 0 in `res`, so the
+        # complement's high bits are masked off for free.
         return jnp.bitwise_and(jnp.bitwise_not(new), res)
 
     def to_tokens(self, x):
-        b, h, w, c = x.shape
-        return x.reshape(b, h * w, c)
+        g, b, h, w, c = x.shape
+        return x.reshape(g, b, h * w, c)
 
     def rate(self, x, *, t: int):
         spikes = unpack_timesteps(x, t)                 # (T, B, N, D) float

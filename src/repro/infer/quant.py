@@ -1,0 +1,65 @@
+"""int8 weight quantization for the packed inference datapath.
+
+VESTA's PE multiplies one 8-bit-integer weight by one binary spike; the float
+route of this reproduction uses f32 weights only because they fall out of BN
+folding. This module closes the gap: every BN-folded kernel is quantized to
+int8 with a per-output-channel symmetric scale, and — the part that keeps the
+datapath integer — the scale is never applied to the accumulators. Instead it
+is folded into the LIF threshold comparison:
+
+    acc      = sum_k spike_k * wq[k, n]              (exact small integers)
+    fires    <=>  h(acc*s + bias) >= v_th
+             <=>  h(acc  + bias/s) >= v_th / s       (LIF dynamics are
+                                                      per-channel linear)
+
+so the packed route runs LIF on the raw integer accumulators with a
+per-channel bias ``bias/s`` and threshold ``v_th/s`` (see
+``kernels.ops.tflif_pack``'s vector ``v_th``). The LIF recurrence
+``h = v + (x + b - v)/tau``, the hard reset, and the comparison are all
+homogeneous of degree 1 in (x, b, v, v_th), so the rescaled dynamics fire on
+exactly the same set of timesteps.
+
+The exactness reference for this route is the *float emulation*: the same
+quantized integer weights run through the float graph with the same
+scale-folded bias/threshold (``FloatBackend`` with a quantized tree). The two
+are bit-identical on CPU; quantization *error* vs the original float weights
+is a model-accuracy question, measured end-to-end, not hidden in kernels.
+
+STDP attention has no weights (binary q/k/v), and the classifier head runs on
+float rates — both stay untouched.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+WEIGHT_DTYPES = ("float32", "int8")
+
+
+def quantize_layer(layer):
+    """{kernel, bias} -> {kernel: int8, scale: (N,) f32, bias} per-channel
+    symmetric quantization over the output-channel (last) axis."""
+    w = layer["kernel"].astype(jnp.float32)
+    amax = jnp.max(jnp.abs(w), axis=tuple(range(w.ndim - 1)))
+    scale = jnp.where(amax > 0, amax / 127.0, jnp.float32(1.0))
+    wq = jnp.clip(jnp.round(w / scale), -127, 127).astype(jnp.int8)
+    return {"kernel": wq, "scale": scale, "bias": layer["bias"]}
+
+
+def quantize_folded(folded):
+    """Quantize a ``fold_inference_params`` tree to int8 weights.
+
+    Every SCS conv and every SSA/MLP linear gains a ``scale`` leaf and an
+    int8 ``kernel``; the float head is passed through unchanged. Backends
+    detect the ``scale`` leaf and switch to the threshold-folded LIF.
+    """
+    out = {"scs": {}, "blocks": {}, "head": folded["head"]}
+    for name, layer in folded["scs"].items():
+        out["scs"][name] = quantize_layer(layer)
+    for bname, blk in folded["blocks"].items():
+        fb = {"ssa": {}, "mlp": {}}
+        for wn, layer in blk["ssa"].items():
+            fb["ssa"][wn] = quantize_layer(layer)
+        for fc, layer in blk["mlp"].items():
+            fb["mlp"][fc] = quantize_layer(layer)
+        out["blocks"][bname] = fb
+    return out

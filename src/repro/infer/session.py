@@ -28,6 +28,7 @@ import numpy as np
 from ..core import spikformer
 from ..core.spikformer import SpikformerConfig, fold_inference_params
 from .backends import get_backend
+from .quant import WEIGHT_DTYPES, quantize_folded
 
 
 class InferenceSession:
@@ -35,14 +36,38 @@ class InferenceSession:
 
     def __init__(self, params, cfg: SpikformerConfig, *, backend="packed",
                  batch_size: int = 8, folded: bool = False,
+                 weight_dtype: str | None = None,
                  pallas: bool | None = None, jit: bool = True):
         """``params`` is a training param tree (BN folded here) unless
         ``folded=True``, in which case it is already a fold_inference_params
-        tree. ``batch_size`` is the static compile shape."""
+        tree (possibly pre-quantized). ``batch_size`` is the static compile
+        shape.
+
+        ``weight_dtype="int8"`` quantizes the folded kernels per-out-channel
+        to int8 (``infer.quant``); the dequantization scale is folded into
+        each layer's LIF threshold, so the packed matmuls stay integer.
+        "float32" keeps the BN-folded floats (the exactness reference for
+        the float route; with int8, the "reference" backend is the bit-exact
+        float *emulation* of the same quantized math). The default ``None``
+        means "whatever the tree carries": float32 for a fresh fold, int8
+        for a pre-quantized tree."""
+        if weight_dtype is not None and weight_dtype not in WEIGHT_DTYPES:
+            raise ValueError(f"unknown weight_dtype {weight_dtype!r}; "
+                             f"expected one of {WEIGHT_DTYPES}")
         self.cfg = cfg
         self.batch_size = int(batch_size)
         self.backend = get_backend(backend, pallas=pallas)
         self.folded = params if folded else fold_inference_params(params, cfg)
+        already_quantized = "scale" in self.folded["scs"]["conv0"]
+        if weight_dtype == "float32" and already_quantized:
+            raise ValueError(
+                "weight_dtype='float32' requested but the folded tree is "
+                "already int8-quantized; pass the float tree or drop the "
+                "weight_dtype argument")
+        if weight_dtype == "int8" and not already_quantized:
+            self.folded = quantize_folded(self.folded)
+        self.weight_dtype = ("int8" if weight_dtype == "int8"
+                             or already_quantized else "float32")
 
         def fwd(folded_tree, images):
             return spikformer.forward_folded(folded_tree, images, cfg,
@@ -98,6 +123,7 @@ def benchmark_session(sess: InferenceSession, *, batches: int = 4,
     n = batches * sess.batch_size
     return {
         "backend": sess.backend.name,
+        "weight_dtype": sess.weight_dtype,
         "batch_size": sess.batch_size,
         "images": n,
         "compile_s": round(compile_s, 3),

@@ -4,6 +4,13 @@ On a real TPU the Pallas kernels run compiled; on CPU (this container) they
 run in interpret mode for correctness, and the pure-XLA reference path is used
 wherever wall-time matters (training/benchmarks). ``use_pallas()`` picks the
 default; every wrapper takes an explicit override.
+
+Plane-group convention (the arbitrary-T packed representation): a T-timestep
+binary activation is stored as ``G = ceil(T/8)`` uint8 *plane groups* with a
+leading group axis — bit j of group g is the spike at timestep ``8g + j``,
+and bits past T-1 in the last group are zero. ``G == 1`` still carries the
+axis, so every packed tensor in the datapath is (G, ...) uint8. Packing /
+unpacking lives in ``core.spike.pack_timesteps`` / ``unpack_timesteps``.
 """
 from __future__ import annotations
 
@@ -15,7 +22,7 @@ from .spike_matmul import spike_matmul as _spike_matmul_pallas
 from .tflif import tflif_fused as _tflif_pallas
 from .stdp_attention import stdp_attention as _stdp_pallas
 from .flash_attention import flash_attention as _flash_pallas
-from ..core.spike import bitplanes_u8, unpack_timesteps
+from ..core.spike import bitplanes_u8, num_plane_groups, unpack_timesteps
 
 
 def on_tpu() -> bool:
@@ -30,14 +37,46 @@ def use_pallas(override: bool | None = None) -> bool:
 
 def spike_matmul(x_packed, w, *, mode: str = "per_plane",
                  pallas: bool | None = None, **blocks):
+    """Unified-PE matmul over packed binary planes.
+
+    Args:
+      x_packed: (M, K) uint8 — bit p of byte [m, k] is plane p's spike — or
+        (G, M, K) uint8 plane groups (mode="per_plane" only).
+      w: (K, N) weights, any float/int dtype (cast to f32 in the dot).
+      mode: "per_plane" — each of the 8 bit planes gets its own output
+        (WSSL/ZSC/STDP operands); "shift_sum" — planes combined with scales
+        2^p before the dot, i.e. the byte is treated as a uint8 *value*
+        (SSSC).
+      pallas: force the Pallas kernel (True) or the jnp oracle (False);
+        None auto-selects (Pallas on TPU).
+
+    Returns:
+      (8, M, N) f32 for mode="per_plane"; (G, 8, M, N) for grouped input;
+      (M, N) f32 for mode="shift_sum".
+    """
     if use_pallas(pallas):
         return _spike_matmul_pallas(x_packed, w, mode=mode,
                                     interpret=not on_tpu(), **blocks)
     return ref.spike_matmul_ref(x_packed, w, mode=mode)
 
 
-def tflif_fused(x, bias=None, *, tau: float = 2.0, v_th: float = 1.0,
+def tflif_fused(x, bias=None, *, tau: float = 2.0, v_th=1.0,
                 pallas: bool | None = None):
+    """Fused bias-add + LIF over T timesteps, emitting packed spikes.
+
+    Args:
+      x: (T, M) f32 pre-activation accumulators (BN scale already folded into
+        the producing matmul). Any T >= 1.
+      bias: optional (M,) BN-folded bias, added inside the LIF charge.
+      tau: LIF leak constant.
+      v_th: firing threshold — scalar, or (M,) per-neuron vector (used by the
+        int8 route to fold the per-channel weight scale into the comparison).
+      pallas: backend override as in ``spike_matmul``.
+
+    Returns:
+      (G, M) uint8, G = ceil(T/8); bit j of group g = spike at timestep
+      8g + j. Membrane state is carried across group boundaries.
+    """
     if use_pallas(pallas):
         return _tflif_pallas(x, bias, tau=tau, v_th=v_th,
                              interpret=not on_tpu())
@@ -46,6 +85,11 @@ def tflif_fused(x, bias=None, *, tau: float = 2.0, v_th: float = 1.0,
 
 def stdp_attention(q, k, v, *, scale: float, pallas: bool | None = None,
                    **blocks):
+    """Softmax-free spiking attention (Q K^T) V * scale.
+
+    q, k, v: (BH, N, Dh) float {0,1} spike planes (one plane per grid row —
+    callers fold T into BH). Returns (BH, N, Dh) f32 exact accumulators.
+    """
     if use_pallas(pallas):
         return _stdp_pallas(q, k, v, scale=scale, interpret=not on_tpu(),
                             **blocks)
@@ -54,6 +98,10 @@ def stdp_attention(q, k, v, *, scale: float, pallas: bool | None = None,
 
 def flash_attention(q, k, v, *, scale: float, causal: bool = True,
                     pallas: bool | None = None, **blocks):
+    """Standard softmax attention (the non-spiking LM stack's kernel).
+
+    q: (BH, Nq, Dh); k, v: (BH, Nkv, Dh). Returns (BH, Nq, Dh) f32.
+    """
     if use_pallas(pallas):
         return _flash_pallas(q, k, v, scale=scale, causal=causal,
                              interpret=not on_tpu(), **blocks)
@@ -72,28 +120,54 @@ def flash_attention(q, k, v, *, scale: float, causal: bool = True,
 
 def spike_linear(x_packed, w, bias=None, *, t: int,
                  pallas: bool | None = None, **blocks):
-    """Packed WSSL: x_packed (..., K) uint8 (bit i = timestep i's spike) ->
-    (t, ..., N) per-timestep accumulators, T folded into the row dim of one
-    weight-stationary dot exactly like ``unified.wssl``."""
-    lead, k = x_packed.shape[:-1], x_packed.shape[-1]
-    x2 = x_packed.reshape(-1, k)
-    m = x2.shape[0]
+    """Packed WSSL (weight-stationary spiking linear).
+
+    Args:
+      x_packed: (G, ..., K) uint8 temporal plane groups, G = ceil(t/8);
+        bit j of group g = the timestep-(8g+j) spike of that neuron.
+      w: (K, N) weights; bias: optional (N,) added to every timestep.
+      t: number of live timesteps (bits past t-1 must be zero).
+      pallas: backend override.
+
+    Returns:
+      (t, ..., N) f32 per-timestep accumulators. On the CPU route all t
+      planes of all groups are folded into the row dim of ONE dot (exactly
+      ``unified.wssl``, hence bit-exact); the Pallas route runs the grouped
+      kernel, one weight fetch per group of 8 planes.
+    """
+    g = x_packed.shape[0]
+    assert g == num_plane_groups(t), (g, t)
+    lead, k = x_packed.shape[1:-1], x_packed.shape[-1]
+    x2 = x_packed.reshape(g, -1, k)
+    m = x2.shape[1]
+    n = w.shape[-1]
     if use_pallas(pallas):
-        per = _spike_matmul_pallas(x2, w, mode="per_plane",
-                                   interpret=not on_tpu(), **blocks)[:t]
+        per8 = _spike_matmul_pallas(x2, w, mode="per_plane",
+                                    interpret=not on_tpu(), **blocks)
+        per = per8.reshape(g * 8, m, n)[:t]                # (t, M, N)
     else:
-        planes = unpack_timesteps(x2, t)                       # (t, M, K)
+        planes = unpack_timesteps(x2, t)                   # (t, M, K)
         per = (planes.reshape(t * m, k) @ w.astype(jnp.float32)
-               ).reshape(t, m, w.shape[-1])
+               ).reshape(t, m, n)
     if bias is not None:
         per = per + bias.astype(per.dtype)
-    return per.reshape((t, *lead, w.shape[-1]))
+    return per.reshape((t, *lead, n))
 
 
 def sssc_linear(x_u8, w, bias=None, *, pallas: bool | None = None, **blocks):
-    """Packed SSSC: x_u8 (..., K) uint8 *values* -> (..., N) accumulators via
-    the shift-and-sum of 8 bit-plane dots (``y = sum_k 2^k (plane_k . W)``).
-    The Pallas route collapses the 8 planes into one dot (shift_sum mode)."""
+    """Packed SSSC (shift-and-sum spiking conv, as a linear over 8 bit-planes).
+
+    Args:
+      x_u8: (..., K) uint8 *values* (the image is its own packing: bit p of a
+        byte is value-plane p, combined with scale 2^p). Always exactly 8
+        planes — SSSC never grows a plane-group axis.
+      w: (K, N) weights; bias: optional (N,).
+
+    Returns:
+      (..., N) f32 accumulators, ``y = sum_p 2^p (plane_p . W)`` — identical
+      to an 8-bit conv. The Pallas route collapses the 8 planes into one dot
+      (shift_sum mode).
+    """
     lead, k = x_u8.shape[:-1], x_u8.shape[-1]
     x2 = x_u8.reshape(-1, k)
     m = x2.shape[0]
@@ -101,7 +175,7 @@ def sssc_linear(x_u8, w, bias=None, *, pallas: bool | None = None, **blocks):
         y = _spike_matmul_pallas(x2, w, mode="shift_sum",
                                  interpret=not on_tpu(), **blocks)
     else:
-        planes = bitplanes_u8(x2)                              # (8, M, K)
+        planes = bitplanes_u8(x2)                          # (8, M, K)
         per = (planes.reshape(8 * m, k) @ w.astype(jnp.float32)
                ).reshape(8, m, w.shape[-1])
         scales = (2.0 ** jnp.arange(8, dtype=per.dtype)).reshape(8, 1, 1)
@@ -112,32 +186,57 @@ def sssc_linear(x_u8, w, bias=None, *, pallas: bool | None = None, **blocks):
 
 
 def tflif_pack(acc, bias=None, *, t: int | None = None, tau: float = 2.0,
-               v_th: float = 1.0, pallas: bool | None = None):
-    """Batched TFLIF: (T, ...) float accumulators -> (...) uint8 packed
-    spikes (bit i = timestep i). The whole T axis is fused; ``bias`` (the
-    BN-folded shift) is added inside the same pass."""
+               v_th=1.0, pallas: bool | None = None):
+    """Batched TFLIF: per-timestep accumulators -> packed plane groups.
+
+    Args:
+      acc: (T, ...) f32 accumulators, any T >= 1. The whole T axis is fused;
+        membrane state crosses the 8-timestep group boundaries inside the
+        kernel.
+      bias: optional BN-folded shift, broadcastable to acc.shape[1:], added
+        inside the same pass.
+      v_th: scalar threshold, or an array broadcastable to acc.shape[1:] —
+        per-channel thresholds carry the int8 weight-scale fold
+        (spike iff h >= v_th/s without rescaling the accumulator).
+      t: override for T (defaults to acc.shape[0]).
+
+    Returns:
+      (G, ...) uint8 plane groups, G = ceil(T/8); bit j of group g = spike at
+      timestep 8g + j.
+    """
     t = acc.shape[0] if t is None else t
-    assert t <= 8, f"one uint8 holds at most 8 timestep bits, got T={t}"
     lead = acc.shape[1:]
     x2 = acc.reshape(t, -1)
     if bias is not None:
         bias = jnp.broadcast_to(bias, lead).reshape(-1)
+    if not isinstance(v_th, (int, float)):
+        v_th = jnp.broadcast_to(v_th, lead).reshape(-1)
     packed = tflif_fused(x2, bias, tau=tau, v_th=v_th, pallas=pallas)
-    return packed.reshape(lead)
+    return packed.reshape((packed.shape[0], *lead))
 
 
 def stdp_attention_packed(q_packed, k_packed, v_packed, *, t: int,
                           scale: float, pallas: bool | None = None, **blocks):
-    """Packed STDP: q/k/v (..., N, Dh) uint8 temporal-packed spikes ->
-    (t, ..., N, Dh) attention accumulators. Timesteps attend independently
-    (spike attention has no cross-T term), so T folds into the batch-heads
-    grid dim of the tile-fused kernel."""
-    lead = q_packed.shape[:-2]
+    """Packed STDP: softmax-free attention over temporal plane groups.
+
+    Args:
+      q_packed, k_packed, v_packed: (G, ..., N, Dh) uint8 temporal plane
+        groups (G = ceil(t/8)). Timesteps attend independently — spike
+        attention has no cross-T term — so all t planes fold into the
+        batch-heads grid dim of the tile-fused kernel.
+      t: live timesteps; scale: output scale (power of two in Spikformer, so
+        results stay exact).
+
+    Returns:
+      (t, ..., N, Dh) f32 attention accumulators.
+    """
+    lead = q_packed.shape[1:-2]
     n, dh = q_packed.shape[-2:]
 
     def unfold(z):
-        planes = unpack_timesteps(z.reshape(-1, n, z.shape[-1]), t)
-        return planes.reshape(-1, n, z.shape[-1])              # (t*BH, N, Dh)
+        planes = unpack_timesteps(z.reshape(z.shape[0], -1, n, z.shape[-1]),
+                                  t)                       # (t, BH', N, Dh)
+        return planes.reshape(-1, n, z.shape[-1])          # (t*BH, N, Dh)
 
     out = stdp_attention(unfold(q_packed), unfold(k_packed), unfold(v_packed),
                          scale=scale, pallas=pallas, **blocks)

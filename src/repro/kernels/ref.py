@@ -4,9 +4,18 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from ..core.spike import num_plane_groups
+
 
 def spike_matmul_ref(x_packed, w, *, mode: str = "per_plane"):
-    """x_packed: (M, K) uint8; w: (K, N)."""
+    """x_packed: (M, K) or (G, M, K) uint8; w: (K, N).
+
+    2D input -> (8, M, N) per-plane / (M, N) shift_sum, as the Pallas kernel.
+    3D input (plane groups, mode="per_plane" only) -> (G, 8, M, N)."""
+    if x_packed.ndim == 3:
+        assert mode == "per_plane", "plane groups are temporal: per_plane only"
+        return jnp.stack([spike_matmul_ref(xg, w, mode=mode)
+                          for xg in x_packed])
     bits = ((x_packed[None, :, :] >> jnp.arange(8, dtype=jnp.uint8)[:, None, None])
             & jnp.uint8(1)).astype(jnp.float32)           # (8, M, K)
     per_plane = jnp.einsum("pmk,kn->pmn", bits, w.astype(jnp.float32))
@@ -16,19 +25,27 @@ def spike_matmul_ref(x_packed, w, *, mode: str = "per_plane"):
     return (per_plane * scales).sum(axis=0)
 
 
-def tflif_ref(x, bias=None, *, tau: float = 2.0, v_th: float = 1.0):
-    """x: (T, M) -> (M,) uint8 packed spikes (bit t = timestep t)."""
+def tflif_ref(x, bias=None, *, tau: float = 2.0, v_th=1.0):
+    """x: (T, M) -> (G, M) uint8 packed spikes, G = ceil(T/8); bit j of group
+    g is the spike at timestep 8g+j. The membrane state is carried across
+    group boundaries (one sequential scan over all T). ``v_th`` is a scalar
+    or an (M,) per-neuron threshold (the int8 weight-scale fold)."""
     t_steps, m = x.shape
+    groups = num_plane_groups(t_steps)
     if bias is None:
         bias = jnp.zeros((m,), jnp.float32)
+    v_th = jnp.asarray(v_th, jnp.float32)
     v = jnp.zeros((m,), jnp.float32)
-    packed = jnp.zeros((m,), jnp.uint8)
-    for t in range(t_steps):
-        h = v + (x[t].astype(jnp.float32) + bias - v) / tau
-        s = h >= v_th
-        v = jnp.where(s, 0.0, h)
-        packed = packed | (s.astype(jnp.uint8) << jnp.uint8(t))
-    return packed
+    out = []
+    for g in range(groups):
+        packed = jnp.zeros((m,), jnp.uint8)
+        for j in range(min(8, t_steps - 8 * g)):
+            h = v + (x[8 * g + j].astype(jnp.float32) + bias - v) / tau
+            s = h >= v_th
+            v = jnp.where(s, 0.0, h)
+            packed = packed | (s.astype(jnp.uint8) << jnp.uint8(j))
+        out.append(packed)
+    return jnp.stack(out)
 
 
 def stdp_attention_ref(q, k, v, *, scale: float):

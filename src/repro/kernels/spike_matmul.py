@@ -32,15 +32,19 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 
-def _kernel(x_ref, w_ref, o_ref, acc_ref, *, mode: str, nk: int):
-    """x_ref: (bm, bk) uint8 packed; w_ref: (bk, bn); o_ref: (8,bm,bn)|(bm,bn)."""
-    k_step = pl.program_id(2)
+def _kernel(x_ref, w_ref, o_ref, acc_ref, *, mode: str, nk: int,
+            k_dim: int = 2):
+    """x_ref: (bm, bk) uint8 packed (or (1, bm, bk) in the grouped grid);
+    w_ref: (bk, bn); o_ref: (8,bm,bn) | (bm,bn) | (1,8,bm,bn) grouped."""
+    k_step = pl.program_id(k_dim)
 
     @pl.when(k_step == 0)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
     x = x_ref[...]
+    if x.ndim == 3:                     # grouped grid: squeeze the g block dim
+        x = x[0]
     w = w_ref[...].astype(jnp.float32)
     bm, bk = x.shape
     if mode == "per_plane":
@@ -56,19 +60,30 @@ def _kernel(x_ref, w_ref, o_ref, acc_ref, *, mode: str, nk: int):
 
     @pl.when(k_step == nk - 1)
     def _done():
-        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+        acc = acc_ref[...].astype(o_ref.dtype)
+        o_ref[...] = acc if o_ref.ndim == acc.ndim else acc[None]
 
 
 @functools.partial(jax.jit, static_argnames=("mode", "bm", "bn", "bk", "interpret"))
 def spike_matmul(x_packed, w, *, mode: str = "per_plane",
                  bm: int = 128, bn: int = 128, bk: int = 256,
                  interpret: bool = True):
-    """x_packed: (M, K) uint8 (bit p of [m,k] = plane p's spike); w: (K, N).
+    """x_packed: (M, K) uint8 (bit p of [m,k] = plane p's spike) or, for
+    mode="per_plane" only, (G, M, K) plane groups; w: (K, N).
 
-    Returns (8, M, N) for mode="per_plane", (M, N) for mode="shift_sum".
-    Shapes are padded to block multiples internally.
+    Returns (8, M, N) for mode="per_plane" [(G, 8, M, N) grouped], (M, N) for
+    mode="shift_sum". Shapes are padded to block multiples internally.
+
+    Grouped route: the plane-group axis becomes the outermost grid dimension,
+    so each (bk, bn) weight tile streamed into VMEM serves all 8 planes of a
+    group before the grid advances — the weight-stationary property is per
+    group of 8, exactly the VESTA PE contract.
     """
     assert mode in ("per_plane", "shift_sum"), mode
+    if x_packed.ndim == 3:
+        assert mode == "per_plane", "plane groups are temporal: per_plane only"
+        return _spike_matmul_grouped(x_packed, w, bm=bm, bn=bn, bk=bk,
+                                     interpret=interpret)
     m, k = x_packed.shape
     k2, n = w.shape
     assert k == k2, (x_packed.shape, w.shape)
@@ -107,3 +122,39 @@ def spike_matmul(x_packed, w, *, mode: str = "per_plane",
     if mode == "per_plane":
         return y[:, :m, :n]
     return y[:m, :n]
+
+
+def _spike_matmul_grouped(x_packed, w, *, bm: int, bn: int, bk: int,
+                          interpret: bool):
+    """(G, M, K) uint8 plane groups x (K, N) -> (G, 8, M, N) per-plane dots.
+
+    Grid (G, M/bm, N/bn, K/bk): for each group the inner three dims replay the
+    2D per_plane schedule, reusing the same (8, bm, bn) f32 accumulator tile.
+    """
+    g, m, k = x_packed.shape
+    k2, n = w.shape
+    assert k == k2, (x_packed.shape, w.shape)
+    bm_, bn_, bk_ = min(bm, m), min(bn, n), min(bk, k)
+    pm, pn, pk = (-m) % bm_, (-n) % bn_, (-k) % bk_
+    if pm or pk:
+        x_packed = jnp.pad(x_packed, ((0, 0), (0, pm), (0, pk)))
+    if pk or pn:
+        w = jnp.pad(w, ((0, pk), (0, pn)))
+    mp, kp = x_packed.shape[1:]
+    np_ = w.shape[1]
+    grid = (g, mp // bm_, np_ // bn_, kp // bk_)
+
+    y = pl.pallas_call(
+        functools.partial(_kernel, mode="per_plane", nk=grid[3], k_dim=3),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bm_, bk_), lambda gg, i, j, kk: (gg, i, kk)),
+            pl.BlockSpec((bk_, bn_), lambda gg, i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((1, 8, bm_, bn_),
+                               lambda gg, i, j, kk: (gg, 0, i, j)),
+        out_shape=jax.ShapeDtypeStruct((g, 8, mp, np_), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((8, bm_, bn_), jnp.float32)],
+        interpret=interpret,
+    )(x_packed, w)
+    return y[:, :, :m, :n]

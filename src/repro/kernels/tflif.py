@@ -1,11 +1,19 @@
 """TFLIF Pallas kernel: fused (BN-folded bias add) + LIF over T timesteps,
 emitting bit-packed spikes.
 
-The T axis stays in registers (T=4 unrolled), the bias (which already carries
-the folded BN shift — "subtract the LIF threshold from the BN bias") is added
-in the same pass, and the output is written as ONE uint8 per neuron with bit t
-holding the timestep-t spike: the paper's Output-SRAM packing, which is what
-keeps inter-layer traffic at 1 bit/activation.
+The T axis stays in registers (statically unrolled), the bias (which already
+carries the folded BN shift — "subtract the LIF threshold from the BN bias")
+is added in the same pass, and the output is written as ``G = ceil(T/8)``
+uint8 plane groups per neuron with bit j of group g holding the timestep
+``8g+j`` spike: the paper's Output-SRAM packing, which is what keeps
+inter-layer traffic at 1 bit/activation. The membrane potential is carried
+across group boundaries inside the kernel — T > 8 costs extra output bytes,
+never a second pass over the input.
+
+The threshold is an (M,)-vector operand rather than a compile-time constant
+so the int8-weight route can fold its per-channel dequantization scale into
+the comparison (spike iff h >= v_th/s) without ever rescaling the integer
+accumulators.
 
 Elementwise (VPU) kernel; grid over flattened neurons.
 """
@@ -17,48 +25,59 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from ..core.spike import num_plane_groups
+
 TAU = 2.0
 V_TH = 1.0
 
 
-def _kernel(x_ref, b_ref, o_ref, *, t_steps: int, tau: float, v_th: float):
-    """x_ref: (T, bm); b_ref: (bm,); o_ref: (bm,) uint8 packed spikes."""
+def _kernel(x_ref, b_ref, vth_ref, o_ref, *, t_steps: int, tau: float):
+    """x_ref: (T, bm); b_ref, vth_ref: (bm,); o_ref: (G, bm) uint8 packed."""
     bias = b_ref[...]
+    v_th = vth_ref[...]
+    groups = o_ref.shape[0]
     v = jnp.zeros_like(x_ref[0])
-    packed = jnp.zeros(x_ref.shape[1:], jnp.uint8)
-    for t in range(t_steps):  # static unroll: T lives in VREGs
-        h = v + (x_ref[t] + bias - v) / tau
-        s = (h >= v_th)
-        v = jnp.where(s, 0.0, h)
-        packed = packed | (s.astype(jnp.uint8) << jnp.uint8(t))
-    o_ref[...] = packed
+    out = []
+    for g in range(groups):            # static unroll: T lives in VREGs
+        packed = jnp.zeros(x_ref.shape[1:], jnp.uint8)
+        for j in range(min(8, t_steps - 8 * g)):
+            h = v + (x_ref[8 * g + j] + bias - v) / tau
+            s = (h >= v_th)
+            v = jnp.where(s, 0.0, h)   # hard reset; v crosses group bounds
+            packed = packed | (s.astype(jnp.uint8) << jnp.uint8(j))
+        out.append(packed)
+    o_ref[...] = jnp.stack(out)
 
 
-@functools.partial(jax.jit, static_argnames=("tau", "v_th", "bm", "interpret"))
-def tflif_fused(x, bias=None, *, tau: float = TAU, v_th: float = V_TH,
+@functools.partial(jax.jit, static_argnames=("tau", "bm", "interpret"))
+def tflif_fused(x, bias=None, *, tau: float = TAU, v_th=V_TH,
                 bm: int = 1024, interpret: bool = True):
     """x: (T, M) f32 pre-activation accumulators (BN scale already folded into
-    the producing matmul); bias: (M,) BN-folded bias. Returns (M,) uint8 with
-    bit t = spike at timestep t. T must be <= 8."""
+    the producing matmul); bias: (M,) BN-folded bias; v_th: scalar or (M,)
+    per-neuron firing threshold. Returns (G, M) uint8, G = ceil(T/8), with
+    bit j of group g = spike at timestep 8g+j."""
     t_steps, m = x.shape
-    assert t_steps <= 8, t_steps
+    groups = num_plane_groups(t_steps)
     if bias is None:
         bias = jnp.zeros((m,), jnp.float32)
+    v_th = jnp.broadcast_to(jnp.asarray(v_th, jnp.float32), (m,))
     bm_ = min(bm, m)
     pad = (-m) % bm_
     if pad:
         x = jnp.pad(x, ((0, 0), (0, pad)))
         bias = jnp.pad(bias, (0, pad))
+        v_th = jnp.pad(v_th, (0, pad), constant_values=1.0)
     mp = x.shape[1]
     y = pl.pallas_call(
-        functools.partial(_kernel, t_steps=t_steps, tau=tau, v_th=v_th),
+        functools.partial(_kernel, t_steps=t_steps, tau=tau),
         grid=(mp // bm_,),
         in_specs=[
             pl.BlockSpec((t_steps, bm_), lambda i: (0, i)),
             pl.BlockSpec((bm_,), lambda i: (i,)),
+            pl.BlockSpec((bm_,), lambda i: (i,)),
         ],
-        out_specs=pl.BlockSpec((bm_,), lambda i: (i,)),
-        out_shape=jax.ShapeDtypeStruct((mp,), jnp.uint8),
+        out_specs=pl.BlockSpec((groups, bm_), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((groups, mp), jnp.uint8),
         interpret=interpret,
-    )(x.astype(jnp.float32), bias.astype(jnp.float32))
-    return y[:m]
+    )(x.astype(jnp.float32), bias.astype(jnp.float32), v_th)
+    return y[:, :m]

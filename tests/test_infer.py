@@ -1,22 +1,30 @@
 """Packed-bit inference parity: for each of the four unified dataflows
 (WSSL/ZSC/SSSC/STDP) the packed path must match the ``core.unified`` float
 reference BIT-EXACTLY on random binary/uint8 inputs — spikes are binary, so
-no tolerance — including the T-fold and the SSSC bit-plane 2^k bookkeeping.
-Plus: InferenceSession end-to-end equality, static-shape batching, and the
+no tolerance — including the T-fold across ``ceil(T/8)`` plane groups and
+the SSSC bit-plane 2^k bookkeeping. The int8-weight route is held to the
+same standard against its float-emulation oracle (FloatBackend over the
+quantized tree). Plus: InferenceSession end-to-end equality over
+T in {4, 8, 12, 16} x {float32, int8}, static-shape batching, and the
 micro-batching serve engine."""
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from repro.core import unified
-from repro.core.lif import tflif
-from repro.core.spike import (pack_timesteps, unpack_timesteps,
-                              space_to_depth)
+from repro.core.lif import V_TH, tflif
+from repro.core.spike import (num_plane_groups, pack_timesteps,
+                              unpack_timesteps, space_to_depth)
 from repro.core.spikformer import (SpikformerConfig, init, apply,
                                    fold_inference_params, forward_folded)
-from repro.infer import FloatBackend, PackedBackend, InferenceSession
+from repro.infer import (FloatBackend, PackedBackend, InferenceSession,
+                         quantize_folded, quantize_layer)
 from repro.kernels import ops
+
+TS = [1, 4, 8, 12, 16]
 
 
 def exact(a, b):
@@ -32,9 +40,10 @@ def bern(key, shape, p=0.3):
 # ---------------------------------------------------------------------------
 
 @pytest.mark.parametrize("seed", range(5))
-@pytest.mark.parametrize("t", [1, 4, 8])
+@pytest.mark.parametrize("t", TS)
 def test_wssl_packed_parity(seed, t):
-    """Temporal T-fold: packed per-plane matmul == float wssl, exactly."""
+    """Temporal T-fold: packed per-plane matmul == float wssl, exactly,
+    across plane groups."""
     ks = jax.random.split(jax.random.PRNGKey(seed), 3)
     s = bern(ks[0], (t, 2, 10, 16))
     w = jax.random.normal(ks[1], (16, 8))
@@ -44,14 +53,15 @@ def test_wssl_packed_parity(seed, t):
 
 
 @pytest.mark.parametrize("seed", range(3))
-def test_zsc_packed_parity(seed):
-    """Space-to-depth on packed bytes == space-to-depth on spike planes."""
+@pytest.mark.parametrize("t", [4, 12])
+def test_zsc_packed_parity(seed, t):
+    """Space-to-depth on packed plane groups == space-to-depth on planes."""
     ks = jax.random.split(jax.random.PRNGKey(seed), 2)
-    s = bern(ks[0], (4, 2, 8, 8, 3), 0.4)
+    s = bern(ks[0], (t, 2, 8, 8, 3), 0.4)
     kern = jax.random.normal(ks[1], (2, 2, 3, 5))
     want = unified.zsc(s, kern)
     got = ops.spike_linear(space_to_depth(pack_timesteps(s), 2),
-                           kern.reshape(-1, 5), t=4)
+                           kern.reshape(-1, 5), t=t)
     exact(got, want)
 
 
@@ -68,10 +78,11 @@ def test_sssc_packed_parity(seed):
 
 
 @pytest.mark.parametrize("seed", range(5))
-@pytest.mark.parametrize("t", [1, 4, 8])
+@pytest.mark.parametrize("t", TS)
 def test_stdp_packed_parity(seed, t):
-    """Softmax-free attention on packed spikes == float stdp. Binary q/k/v
-    make every score an exact integer, so associativity cannot break this."""
+    """Softmax-free attention on packed plane groups == float stdp. Binary
+    q/k/v make every score an exact integer, so associativity cannot break
+    this."""
     ks = jax.random.split(jax.random.PRNGKey(seed), 3)
     q, k, v = [bern(kk, (t, 1, 2, 32, 16)) for kk in ks]
     got = ops.stdp_attention_packed(pack_timesteps(q), pack_timesteps(k),
@@ -80,26 +91,40 @@ def test_stdp_packed_parity(seed, t):
 
 
 @pytest.mark.parametrize("seed", range(5))
-def test_tflif_pack_parity(seed):
-    """Packed TFLIF output bits == the differentiable training LIF spikes."""
+@pytest.mark.parametrize("t", [4, 12, 16])
+def test_tflif_pack_parity(seed, t):
+    """Packed TFLIF output bits == the differentiable training LIF spikes —
+    the membrane state must survive the 8-timestep group boundary."""
     ks = jax.random.split(jax.random.PRNGKey(seed), 2)
-    acc = jax.random.normal(ks[0], (4, 2, 10, 8)) * 2.0
+    acc = jax.random.normal(ks[0], (t, 2, 10, 8)) * 2.0
     bias = jax.random.normal(ks[1], (8,)) * 0.5
     exact(ops.tflif_pack(acc, bias), pack_timesteps(tflif(acc + bias)))
 
 
-def test_batched_entry_points_pallas_route():
+@pytest.mark.parametrize("seed", range(3))
+def test_tflif_pack_per_channel_vth(seed):
+    """Vector v_th (the int8 scale fold) == running the scaled dynamics."""
+    ks = jax.random.split(jax.random.PRNGKey(seed), 2)
+    acc = jax.random.normal(ks[0], (12, 2, 8)) * 2.0
+    vth = jnp.abs(jax.random.normal(ks[1], (8,))) + 0.5
+    got = ops.tflif_pack(acc, None, v_th=vth)
+    want = pack_timesteps(tflif(acc, v_th=vth))
+    exact(got, want)
+
+
+@pytest.mark.parametrize("t", [4, 16])
+def test_batched_entry_points_pallas_route(t):
     """The forced-Pallas (interpret) route of the batched packed entry points
     agrees with the CPU oracle route (tolerance: blocked accumulation)."""
     ks = jax.random.split(jax.random.PRNGKey(2), 3)
-    s = bern(ks[0], (4, 2, 6, 16))
+    s = bern(ks[0], (t, 2, 6, 16))
     w = jax.random.normal(ks[1], (16, 8))
     b = jax.random.normal(ks[2], (8,))
     p = pack_timesteps(s)
     np.testing.assert_allclose(
-        np.asarray(ops.spike_linear(p, w, b, t=4, pallas=True)),
-        np.asarray(ops.spike_linear(p, w, b, t=4)), rtol=1e-5, atol=1e-4)
-    acc = jax.random.normal(ks[0], (4, 2, 6, 8)) * 2.0
+        np.asarray(ops.spike_linear(p, w, b, t=t, pallas=True)),
+        np.asarray(ops.spike_linear(p, w, b, t=t)), rtol=1e-5, atol=1e-4)
+    acc = jax.random.normal(ks[0], (t, 2, 6, 8)) * 2.0
     exact(ops.tflif_pack(acc, b, pallas=True), ops.tflif_pack(acc, b))
     xu = jax.random.randint(ks[1], (2, 6, 12), 0, 256, jnp.uint8)
     w2 = jax.random.normal(ks[2], (12, 5))
@@ -108,23 +133,82 @@ def test_batched_entry_points_pallas_route():
         np.asarray(ops.sssc_linear(xu, w2)), rtol=5e-3, atol=0.5)
 
 
-def test_pack_timesteps_roundtrip_and_bit_layout():
-    s = bern(jax.random.PRNGKey(0), (5, 3, 7), 0.5)
+@pytest.mark.parametrize("t", TS)
+def test_pack_timesteps_roundtrip_and_bit_layout(t):
+    s = bern(jax.random.PRNGKey(0), (t, 3, 7), 0.5)
     p = pack_timesteps(s)
-    assert p.dtype == jnp.uint8 and p.shape == (3, 7)
-    exact(unpack_timesteps(p, 5), s)
-    # bit t holds timestep t (tflif_ref convention); bits >= T are zero
-    for t in range(5):
-        exact((p >> t) & 1, s[t].astype(jnp.uint8))
-    assert int(jnp.max(p >> 5)) == 0
+    g = num_plane_groups(t)
+    assert p.dtype == jnp.uint8 and p.shape == (g, 3, 7)
+    exact(unpack_timesteps(p, t), s)
+    # bit j of group tt//8 holds timestep tt (tflif_ref convention)
+    for tt in range(t):
+        exact((p[tt // 8] >> (tt % 8)) & 1, s[tt].astype(jnp.uint8))
+    # bits past T-1 in the last group are zero
+    live_last = t - 8 * (g - 1)
+    if live_last < 8:
+        assert int(jnp.max(p[g - 1] >> live_last)) == 0
 
 
-def test_packed_iand_residual_matches_float():
+@pytest.mark.parametrize("t", [4, 12])
+def test_packed_iand_residual_matches_float(t):
     ks = jax.random.split(jax.random.PRNGKey(1), 2)
-    a, b = bern(ks[0], (4, 50), 0.5), bern(ks[1], (4, 50), 0.5)
+    a, b = bern(ks[0], (t, 50), 0.5), bern(ks[1], (t, 50), 0.5)
     got = PackedBackend().residual(pack_timesteps(a), pack_timesteps(b),
                                    "iand")
     exact(got, pack_timesteps((1.0 - a) * b))
+
+
+# ---------------------------------------------------------------------------
+# int8 weight quantization (the scale-folded threshold route)
+# ---------------------------------------------------------------------------
+
+def test_quantize_layer_roundtrip_bound():
+    """|w - wq*s| <= s/2 per element, wq in [-127, 127], scale > 0."""
+    w = jax.random.normal(jax.random.PRNGKey(0), (16, 8)) * 3.0
+    q = quantize_layer({"kernel": w, "bias": jnp.zeros((8,))})
+    assert q["kernel"].dtype == jnp.int8
+    wq = np.asarray(q["kernel"], np.float32)
+    s = np.asarray(q["scale"])
+    assert (np.abs(wq) <= 127).all() and (s > 0).all()
+    bound = np.broadcast_to(s / 2 + 1e-7, wq.shape)
+    np.testing.assert_array_less(np.abs(np.asarray(w) - wq * s), bound)
+
+
+def test_quantize_idempotent_on_grid():
+    """Weights already on the int8 grid re-quantize to themselves (every
+    channel max rounds to exactly +-127, so the recovered scale matches)."""
+    w = jax.random.normal(jax.random.PRNGKey(3), (16, 8)) * 2.0
+    q1 = quantize_layer({"kernel": w, "bias": jnp.zeros((8,))})
+    deq = q1["kernel"].astype(jnp.float32) * q1["scale"]
+    q2 = quantize_layer({"kernel": deq, "bias": jnp.zeros((8,))})
+    exact(q1["kernel"], q2["kernel"])
+    np.testing.assert_allclose(np.asarray(q1["scale"]),
+                               np.asarray(q2["scale"]), rtol=1e-6)
+
+
+def test_quantize_layer_zero_column_safe():
+    """An all-zero output channel must not divide by zero."""
+    w = jnp.zeros((6, 3)).at[:, 1].set(1.0)
+    q = quantize_layer({"kernel": w, "bias": jnp.zeros((3,))})
+    assert bool(jnp.all(jnp.isfinite(q["scale"])))
+    assert int(q["kernel"][0, 0]) == 0
+
+
+@pytest.mark.parametrize("seed", range(3))
+@pytest.mark.parametrize("t", [4, 12])
+def test_wssl_int8_scale_fold_parity(seed, t):
+    """Packed int8 WSSL+LIF (integer accumulators, threshold v_th/s) ==
+    the float emulation of the identical quantized math."""
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    s = bern(ks[0], (t, 2, 10, 16))
+    w = jax.random.normal(ks[1], (16, 8))
+    b = jax.random.normal(ks[2], (8,))
+    q = quantize_layer({"kernel": w, "bias": b})
+    got = PackedBackend().wssl_lif(pack_timesteps(s), q["kernel"], q["bias"],
+                                   t=t, scale=q["scale"])
+    want = pack_timesteps(FloatBackend().wssl_lif(
+        s, q["kernel"], q["bias"], t=t, scale=q["scale"]))
+    exact(got, want)
 
 
 # ---------------------------------------------------------------------------
@@ -140,10 +224,17 @@ def small():
     return cfg, params, img
 
 
-def test_session_packed_matches_reference_exactly(small):
+@pytest.mark.parametrize("t", [4, 8, 12, 16])
+@pytest.mark.parametrize("weight_dtype", ["float32", "int8"])
+def test_session_packed_matches_reference_exactly(small, t, weight_dtype):
+    """The acceptance sweep: multi-group T and int8 weights, all four
+    dataflows end to end, packed logits == reference logits bit for bit."""
     cfg, params, img = small
-    packed = InferenceSession(params, cfg, backend="packed", batch_size=2)
-    ref = InferenceSession(params, cfg, backend="reference", batch_size=2)
+    cfg = dataclasses.replace(cfg, timesteps=t)
+    packed = InferenceSession(params, cfg, backend="packed", batch_size=2,
+                              weight_dtype=weight_dtype)
+    ref = InferenceSession(params, cfg, backend="reference", batch_size=2,
+                           weight_dtype=weight_dtype)
     lp, lr = packed.logits(img), ref.logits(img)
     assert lp.shape == (5, cfg.num_classes)
     exact(lp, lr)
@@ -159,6 +250,24 @@ def test_session_close_to_training_graph(small):
                                np.asarray(want), rtol=1e-3, atol=1e-3)
 
 
+@pytest.mark.parametrize("t", [4, 12])
+def test_int8_lossless_on_grid_weights(t):
+    """Weights exactly representable on the int8 grid fire the same spikes
+    through the int8 scale-folded route as through the float route (the
+    quantization error is zero, so any spike flip would be a datapath bug;
+    thresholds are nowhere near float-rounding distance for these seeds)."""
+    ks = jax.random.split(jax.random.PRNGKey(7), 3)
+    s = bern(ks[0], (t, 2, 10, 16))
+    w = quantize_layer({"kernel": jax.random.normal(ks[1], (16, 8)),
+                        "bias": jnp.zeros((8,))})
+    deq = w["kernel"].astype(jnp.float32) * w["scale"]
+    b = jax.random.normal(ks[2], (8,)) * 0.5
+    via_float = PackedBackend().wssl_lif(pack_timesteps(s), deq, b, t=t)
+    via_int8 = PackedBackend().wssl_lif(pack_timesteps(s), w["kernel"], b,
+                                        t=t, scale=w["scale"])
+    exact(via_float, via_int8)
+
+
 def test_session_static_batching_invariant(small):
     """Any request size through the fixed-shape step == one whole-batch run
     (pad rows must not leak into real outputs)."""
@@ -171,19 +280,40 @@ def test_session_static_batching_invariant(small):
     assert labs.shape == (5,) and labs.dtype == jnp.int32
 
 
-def test_forward_folded_backends_agree(small):
+@pytest.mark.parametrize("weight_dtype", ["float32", "int8"])
+def test_forward_folded_backends_agree(small, weight_dtype):
     """forward_folded (the core driver, below the session layer) produces
     identical logits through the float and packed backends."""
     cfg, params, img = small
     folded = fold_inference_params(params, cfg)
+    if weight_dtype == "int8":
+        folded = quantize_folded(folded)
     got = forward_folded(folded, img, cfg, backend=PackedBackend())
     want = forward_folded(folded, img, cfg, backend=FloatBackend())
     exact(got, want)
 
 
+def test_session_rejects_unknown_weight_dtype(small):
+    cfg, params, _ = small
+    with pytest.raises(ValueError, match="weight_dtype"):
+        InferenceSession(params, cfg, weight_dtype="int4")
+
+
+def test_session_weight_dtype_vs_prequantized_tree(small):
+    """A pre-quantized folded tree: default dtype auto-reports int8; an
+    explicit float32 request must fail loudly, not silently run int8."""
+    cfg, params, img = small
+    qtree = quantize_folded(fold_inference_params(params, cfg))
+    auto = InferenceSession(qtree, cfg, folded=True, batch_size=5)
+    assert auto.weight_dtype == "int8"
+    direct = InferenceSession(params, cfg, batch_size=5, weight_dtype="int8")
+    exact(auto.logits(img), direct.logits(img))
+    with pytest.raises(ValueError, match="already int8-quantized"):
+        InferenceSession(qtree, cfg, folded=True, weight_dtype="float32")
+
+
 def test_packed_backend_rejects_add_residual(small):
     cfg, params, img = small
-    import dataclasses
     cfg_add = dataclasses.replace(cfg, residual="add")
     sess = InferenceSession(params, cfg_add, backend="packed", batch_size=5,
                             jit=False)

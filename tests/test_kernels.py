@@ -82,12 +82,32 @@ def test_spike_matmul_zero_and_saturated():
     np.testing.assert_allclose(np.asarray(o), np.asarray(want), rtol=1e-6)
 
 
+@pytest.mark.parametrize("g,m,k,n", [(1, 8, 16, 8), (2, 64, 96, 24),
+                                     (3, 30, 200, 72)])
+def test_spike_matmul_grouped(g, m, k, n):
+    """(G, M, K) plane groups through the grouped grid == per-group calls of
+    the 2D kernel and the oracle."""
+    kx, kw = jax.random.split(jax.random.PRNGKey(13))
+    x = jax.random.randint(kx, (g, m, k), 0, 256, jnp.uint8)
+    w = jax.random.normal(kw, (k, n), jnp.float32)
+    got = spike_matmul(x, w, mode="per_plane", interpret=True)
+    assert got.shape == (g, 8, m, n)
+    want = ref.spike_matmul_ref(x, w, mode="per_plane")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-4)
+    for gg in range(g):
+        np.testing.assert_allclose(
+            np.asarray(got[gg]),
+            np.asarray(spike_matmul(x[gg], w, interpret=True)),
+            rtol=1e-6, atol=1e-6)
+
+
 # ---------------------------------------------------------------------------
 # tflif — fused BN+LIF with packed spike output
 # ---------------------------------------------------------------------------
 
 @pytest.mark.parametrize("t,m", [(4, 64), (4, 1000), (8, 64), (2, 3000),
-                                 (1, 17)])
+                                 (1, 17), (12, 64), (16, 1000), (9, 33)])
 def test_tflif_shapes(t, m):
     kx, kb = jax.random.split(jax.random.PRNGKey(3))
     x = jax.random.normal(kx, (t, m)) * 2.0
@@ -95,20 +115,23 @@ def test_tflif_shapes(t, m):
     got = tflif_fused(x, b, interpret=True)
     want = ref.tflif_ref(x, b)
     assert got.dtype == jnp.uint8
+    assert got.shape == (-(-t // 8), m)
     assert bool((got == want).all())
 
 
-def test_tflif_matches_training_lif():
+@pytest.mark.parametrize("t", [4, 12])
+def test_tflif_matches_training_lif(t):
     """The packed inference kernel fires exactly where the differentiable
-    training LIF (core.lif.tflif) fires."""
+    training LIF (core.lif.tflif) fires — including across the 8-timestep
+    plane-group boundary (the membrane must not reset at t=8)."""
     from repro.core.lif import tflif as train_tflif
-    x = jax.random.normal(jax.random.PRNGKey(5), (4, 256)) * 2.0
-    spikes_train = train_tflif(x)                       # (4, 256) {0,1} float
-    packed = ref.tflif_ref(x, None)
-    for t in range(4):
-        bit = (packed >> t) & 1
+    x = jax.random.normal(jax.random.PRNGKey(5), (t, 256)) * 2.0
+    spikes_train = train_tflif(x)                       # (T, 256) {0,1} float
+    packed = ref.tflif_ref(x, None)                     # (G, 256)
+    for tt in range(t):
+        bit = (packed[tt // 8] >> (tt % 8)) & 1
         np.testing.assert_array_equal(np.asarray(bit),
-                                      np.asarray(spikes_train[t], np.uint8))
+                                      np.asarray(spikes_train[tt], np.uint8))
 
 
 @pytest.mark.parametrize("seed", range(10))
@@ -116,14 +139,29 @@ def test_tflif_property_reset(seed):
     """Property: a neuron that fires at t has membrane reset — its potential
     contribution cannot leak into t+1 (checked via the oracle recurrence)."""
     rng = np.random.default_rng(100 + seed)
-    t, m = int(rng.integers(1, 9)), int(rng.integers(1, 301))
+    t, m = int(rng.integers(1, 17)), int(rng.integers(1, 301))
     x = jax.random.normal(jax.random.PRNGKey(seed), (t, m)) * 3.0
     got = tflif_fused(x, interpret=True)
     want = ref.tflif_ref(x)
     assert bool((got == want).all())
-    # no bits above t-1
-    if t < 8:
-        assert int(jnp.max(got >> t)) == 0
+    # no bits above t-1 in the last group
+    live = t - 8 * (got.shape[0] - 1)
+    if live < 8:
+        assert int(jnp.max(got[-1] >> live)) == 0
+
+
+@pytest.mark.parametrize("seed", range(3))
+def test_tflif_vector_threshold(seed):
+    """(M,) per-neuron v_th (the int8 weight-scale fold) — Pallas kernel ==
+    oracle, and a large threshold provably silences its neuron."""
+    kx, kv = jax.random.split(jax.random.PRNGKey(40 + seed))
+    x = jax.random.normal(kx, (12, 64)) * 2.0
+    vth = jnp.abs(jax.random.normal(kv, (64,))) + 0.5
+    vth = vth.at[0].set(1e9)
+    got = tflif_fused(x, None, v_th=vth, interpret=True)
+    want = ref.tflif_ref(x, None, v_th=vth)
+    assert bool((got == want).all())
+    assert int(got[:, 0].max()) == 0                   # silenced neuron
 
 
 # ---------------------------------------------------------------------------
