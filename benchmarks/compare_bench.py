@@ -1,0 +1,99 @@
+"""CI gate: compare a fresh infer_bench record against the committed
+trajectory (``BENCH_infer.json``) with a tolerance.
+
+Checks against the latest committed record of the SAME mode (smoke vs
+smoke, full vs full — timings across configs are not comparable):
+
+  * ``bit_exact`` must hold in the current record (hard gate);
+  * the geometric mean over shared (timesteps, weight_dtype) points of
+    ``current.packed_speedup / committed.packed_speedup`` must be at least
+    ``--min-ratio`` (default 0.4). A real regression — the LUT route
+    silently falling off a cliff — drags every point down together; CI
+    runner noise hits single points, which a per-point gate would flake on
+    and the geomean absorbs.
+
+  PYTHONPATH=src python benchmarks/compare_bench.py current.json \
+      [--baseline BENCH_infer.json] [--min-ratio 0.4]
+
+``current.json`` may be a single record or a trajectory array (last record
+wins). Exits 0 when no committed baseline of the same mode exists yet.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+
+REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+
+def load_record(path, mode=None):
+    data = json.loads(pathlib.Path(path).read_text())
+    records = data if isinstance(data, list) else [data]
+    if mode is not None:
+        records = [r for r in records if r.get("mode", "full") == mode]
+    return records[-1] if records else None
+
+
+def point_key(p):
+    return (p["timesteps"], p["weight_dtype"])
+
+
+def compare(current: dict, baseline: dict, *, min_ratio: float):
+    failures = []
+    if not current.get("bit_exact", False):
+        failures.append("current record is not bit_exact")
+    base_points = {point_key(p): p for p in baseline.get("sweep", [])}
+    ratios = []
+    for p in current.get("sweep", []):
+        b = base_points.get(point_key(p))
+        if b is None or b["packed_speedup"] <= 0:
+            continue
+        ratio = p["packed_speedup"] / b["packed_speedup"]
+        ratios.append(ratio)
+        print(f"T={p['timesteps']}/{p['weight_dtype']}: speedup "
+              f"{p['packed_speedup']:.3f} vs committed "
+              f"{b['packed_speedup']:.3f} (ratio {ratio:.2f})")
+    if not ratios:
+        # a silent pass here would let a sweep rename green-light CI forever
+        failures.append("no comparable sweep points between current and "
+                        "baseline — re-commit a matching baseline")
+        return failures
+    geomean = 1.0
+    for r in ratios:
+        geomean *= r
+    geomean **= 1.0 / len(ratios)
+    verdict = "OK" if geomean >= min_ratio else "REGRESSION"
+    print(f"{verdict}: geomean ratio {geomean:.3f} over {len(ratios)} "
+          f"points (floor {min_ratio:.2f})")
+    if geomean < min_ratio:
+        failures.append(
+            f"geomean speedup ratio {geomean:.3f} < {min_ratio:.2f}")
+    return failures
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("current", help="fresh infer_bench JSON (record or array)")
+    ap.add_argument("--baseline", default=str(REPO_ROOT / "BENCH_infer.json"))
+    ap.add_argument("--min-ratio", type=float, default=0.4)
+    args = ap.parse_args(argv)
+
+    current = load_record(args.current)
+    if current is None:
+        print("no current record", file=sys.stderr)
+        return 2
+    baseline = load_record(args.baseline, mode=current.get("mode", "full"))
+    if baseline is None:
+        print(f"no committed {current.get('mode', 'full')!r} baseline in "
+              f"{args.baseline}; skipping comparison")
+        return 0
+    failures = compare(current, baseline, min_ratio=args.min_ratio)
+    for f in failures:
+        print(f"BENCH REGRESSION: {f}", file=sys.stderr)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -4,20 +4,28 @@ Times the jit-compiled fixed-batch ``InferenceSession`` forward for both
 backends over a sweep of (timesteps, weight_dtype) points — by default
 T in {4, 16} x {float32, int8}, so the perf trajectory captures both the
 plane-group loop overhead (T=16 -> 2 uint8 groups per neuron) and the int8
-scale-folded route — and emits ONE JSON record (stdout, and --out FILE) so
-successive PRs accumulate a perf trajectory. Also reports the
-activation-traffic ratio (the 8x/T-fold packing win that holds on any
-backend) and verifies the two paths agree bit-exactly before timing — a
-benchmark of a wrong path is worthless.
+scale-folded route — and emits ONE JSON record (stdout; ``--out`` appends it
+to the committed ``BENCH_infer.json`` trajectory at the repo root, so
+successive PRs accumulate a perf history; ``benchmarks/compare_bench.py``
+gates CI against it).
 
-  PYTHONPATH=src python benchmarks/infer_bench.py [--batch-size 8] [--out f.json]
-  PYTHONPATH=src python benchmarks/infer_bench.py --smoke     # tiny, 1 repeat
+Three sessions per point keep the comparison honest:
+  * packed (auto-planned)     — the byte-LUT/unpack datapath being measured;
+  * reference (route=unpack)  — the plain single-dot float graph, the
+    throughput *denominator* (the planner's fold-order emulation would slow
+    the reference and flatter the speedup, so it is never timed as baseline);
+  * reference (auto-planned)  — the packed session's bit-exact partner, used
+    only for the exactness probe. A benchmark of a wrong path is worthless.
+
+  PYTHONPATH=src python benchmarks/infer_bench.py [--batch-size 8] [--out [f]]
+  PYTHONPATH=src python benchmarks/infer_bench.py --smoke     # tiny, CI gate
 """
 from __future__ import annotations
 
 import argparse
 import dataclasses
 import json
+import pathlib
 import platform
 import time
 
@@ -29,32 +37,45 @@ from repro.core.spike import num_plane_groups
 from repro.core.spikformer import SpikformerConfig, init as spik_init
 from repro.infer import InferenceSession, benchmark_session
 
+REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
+DEFAULT_OUT = REPO_ROOT / "BENCH_infer.json"
+
 
 def run_point(params, cfg, *, timesteps: int, weight_dtype: str,
-              batch_size: int, batches: int, seed: int) -> dict:
-    """One sweep point: both backends at (timesteps, weight_dtype)."""
+              batch_size: int, batches: int, repeats: int, seed: int) -> dict:
+    """One sweep point: packed vs plain float reference at (T, weight_dtype),
+    with the planned-reference exactness gate."""
     cfg = dataclasses.replace(cfg, timesteps=timesteps)
-    sessions = {
-        name: InferenceSession(params, cfg, backend=name,
-                               batch_size=batch_size,
-                               weight_dtype=weight_dtype)
-        for name in ("packed", "reference")
-    }
+    packed = InferenceSession(params, cfg, backend="packed",
+                              batch_size=batch_size, weight_dtype=weight_dtype)
+    ref_plain = InferenceSession(params, cfg, backend="reference",
+                                 batch_size=batch_size,
+                                 weight_dtype=weight_dtype, route="unpack")
+    ref_planned = InferenceSession(params, cfg, backend="reference",
+                                   batch_size=batch_size,
+                                   weight_dtype=weight_dtype)
 
-    # correctness gate: identical logits on one probe batch
+    # correctness gate: identical logits on one probe batch (the planned
+    # reference is the packed session's bit-exact partner)
     probe = jax.random.randint(jax.random.PRNGKey(seed + 1),
-                               sessions["packed"].input_shape, 0, 256,
-                               jnp.uint8)
-    exact = bool((np.asarray(sessions["packed"].logits(probe))
-                  == np.asarray(sessions["reference"].logits(probe))).all())
+                               packed.input_shape, 0, 256, jnp.uint8)
+    exact = bool((np.asarray(packed.logits(probe))
+                  == np.asarray(ref_planned.logits(probe))).all())
 
-    results = {name: benchmark_session(s, batches=batches, seed=seed + 2)
-               for name, s in sessions.items()}
+    results = {
+        "packed": benchmark_session(packed, batches=batches, seed=seed + 2,
+                                    repeats=repeats),
+        "reference": benchmark_session(ref_plain, batches=batches,
+                                       seed=seed + 2, repeats=repeats),
+    }
+    lut_layers = sum(1 for r in packed.plan.values() if r == "lut")
     return {
         "timesteps": timesteps,
         "weight_dtype": weight_dtype,
         "plane_groups": num_plane_groups(timesteps),
         "bit_exact": exact,
+        "lut_layers": lut_layers,
+        "planned_layers": len(packed.plan),
         "packed": results["packed"],
         "reference": results["reference"],
         "packed_speedup": round(results["packed"]["images_per_s"]
@@ -66,15 +87,17 @@ def run_point(params, cfg, *, timesteps: int, weight_dtype: str,
     }
 
 
-def run(*, batch_size: int = 8, batches: int = 4, seed: int = 0,
-        img_size: int = 32, dim: int = 64, depth: int = 2,
+def run(*, batch_size: int = 8, batches: int = 4, repeats: int = 3,
+        seed: int = 0, img_size: int = 32, dim: int = 64, depth: int = 2,
+        mode: str = "full",
         sweep=((4, "float32"), (4, "int8"), (16, "float32"), (16, "int8")),
         ) -> dict:
     cfg = SpikformerConfig().scaled(img_size=img_size, dim=dim, depth=depth)
     params = spik_init(jax.random.PRNGKey(seed), cfg)
 
     points = [run_point(params, cfg, timesteps=t, weight_dtype=wd,
-                        batch_size=batch_size, batches=batches, seed=seed)
+                        batch_size=batch_size, batches=batches,
+                        repeats=repeats, seed=seed)
               for t, wd in sweep]
 
     # PR-1-compatible trajectory fields come from the (4, float32) point
@@ -84,6 +107,7 @@ def run(*, batch_size: int = 8, batches: int = 4, seed: int = 0,
                 points[0])
     record = {
         "bench": "infer_spikformer",
+        "mode": mode,
         "backend_platform": jax.default_backend(),
         "machine": platform.machine(),
         "config": {"img_size": cfg.img_size, "dim": cfg.dim,
@@ -101,33 +125,60 @@ def run(*, batch_size: int = 8, batches: int = 4, seed: int = 0,
     return record
 
 
+def append_trajectory(record: dict, path) -> None:
+    """Append one record to the JSON-array trajectory file (created if
+    missing). Each PR's full run adds one point; CI smoke runs compare
+    against the latest committed point of the same mode."""
+    path = pathlib.Path(path)
+    history = []
+    if path.exists():
+        text = path.read_text()
+        try:
+            history = json.loads(text)
+        except json.JSONDecodeError:
+            # pre-PR-3 --out wrote one JSON object per line; absorb those
+            # rather than crashing after a multi-minute sweep
+            history = [json.loads(line) for line in text.splitlines() if line]
+        if not isinstance(history, list):
+            history = [history]
+    history.append(record)
+    path.write_text(json.dumps(history, indent=1) + "\n")
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser(description=__doc__)
     # None = "not passed": lets --smoke shrink only unspecified values while
     # an explicit flag always wins
     ap.add_argument("--batch-size", type=int, default=None, help="default 8")
     ap.add_argument("--batches", type=int, default=None, help="default 4")
+    ap.add_argument("--repeats", type=int, default=3,
+                    help="timing windows per session; best wins")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--smoke", action="store_true",
-                    help="tiny config, 1 repeat — CI gate that the sweep "
-                         "runs and stays bit-exact, not a timing")
-    ap.add_argument("--out", default=None, help="also append JSON to FILE")
+                    help="tiny config — CI gate that the sweep runs and "
+                         "stays bit-exact, plus a coarse speedup ratio")
+    ap.add_argument("--out", nargs="?", const=str(DEFAULT_OUT), default=None,
+                    help="append the record to this JSON trajectory file "
+                         f"(bare --out means {DEFAULT_OUT.name} at the "
+                         "repo root)")
     args = ap.parse_args(argv)
 
-    small = (2, 1) if args.smoke else (8, 4)
+    # smoke still times 4-batch windows: a 1-batch window measures a single
+    # dispatch and its speedup ratio is pure noise, useless even with a
+    # loose comparison tolerance
+    small = (2, 4) if args.smoke else (8, 4)
     kw = dict(batch_size=small[0] if args.batch_size is None
               else args.batch_size,
               batches=small[1] if args.batches is None else args.batches,
-              seed=args.seed)
+              repeats=args.repeats, seed=args.seed,
+              mode="smoke" if args.smoke else "full")
     if args.smoke:
         kw.update(img_size=16, dim=32, depth=1)
 
     record = run(**kw)
-    line = json.dumps(record)
-    print(line)
+    print(json.dumps(record))
     if args.out:
-        with open(args.out, "a") as f:
-            f.write(line + "\n")
+        append_trajectory(record, args.out)
     if not record["bit_exact"]:
         raise SystemExit("packed/reference logits diverged — see record")
     return record

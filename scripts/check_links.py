@@ -1,11 +1,11 @@
 #!/usr/bin/env python3
 """Fail on broken *relative* links in the repo's markdown docs.
 
-Scans README.md and docs/*.md (plus any extra paths given on argv) for
-``[text](target)`` links, resolves relative targets against the containing
-file, and exits 1 listing every target that does not exist. http(s)/mailto
-links and pure #anchors are skipped — this is a docs-rot gate for the file
-tree we control, not a network checker.
+Scans README.md, docs/*.md and every README.md under src/ (plus any extra
+paths given on argv) for ``[text](target)`` links, resolves relative targets
+against the containing file, and exits 1 listing every target that does not
+exist. http(s)/mailto links and pure #anchors are skipped — this is a
+docs-rot gate for the file tree we control, not a network checker.
 
   python scripts/check_links.py [extra.md ...]
 """
@@ -30,6 +30,7 @@ def targets(md_path: pathlib.Path):
 def main(argv):
     root = pathlib.Path(__file__).resolve().parent.parent
     files = [root / "README.md", *sorted((root / "docs").glob("*.md")),
+             *sorted((root / "src").rglob("README.md")),
              *(pathlib.Path(a).resolve() for a in argv)]
     broken = []
     checked = 0

@@ -9,6 +9,10 @@
 # a module that stops collecting silently removes its tests from the count,
 # which is how the seed suite rotted (3 modules uncollected for a missing
 # dependency went unnoticed).
+#
+# Emits a machine-readable tier1_summary.json next to this summary, and —
+# when running under GitHub Actions — appends the gate table to
+# $GITHUB_STEP_SUMMARY.
 set -u
 cd "$(dirname "$0")/.."
 
@@ -17,47 +21,87 @@ if [[ "${1:-}" == "--fast" ]]; then
     ARGS+=(-m "not slow"); shift
 fi
 
+T0=$SECONDS
 OUT=$(PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest "${ARGS[@]}" "$@" 2>&1)
 CODE=$?
 echo "$OUT"
 
-TAIL=$(echo "$OUT" | tail -n 3)
+RESULT_LINE=$(echo "$OUT" | tail -n 3 | grep -E '(passed|failed|error)' | tail -n 1)
 ERRORS=$(echo "$OUT" | grep -c "^ERROR ")
 
-# docs can't silently rot: every relative link in README.md / docs/*.md
-# must resolve to a real file
-python scripts/check_links.py src/repro/infer/README.md
+# docs can't silently rot: every relative link in README.md, docs/*.md and
+# src/**/README.md must resolve to a real file (check_links' default set)
+python scripts/check_links.py
 LINKS=$?
 
 # the benchmark sweep (T in {4,16} x {float32,int8}) must run and stay
-# bit-exact — a tiny 1-repeat smoke, not a timing. Skipped when pytest
-# already failed: no point compiling 8 sessions to decorate a red build.
+# bit-exact — the tiny smoke config, not a timing. Skipped when pytest
+# already failed: no point compiling 12 sessions to decorate a red build.
+# TIER1_BENCH_OUT=<file> additionally writes the record there so CI can
+# reuse it for the trajectory comparison instead of running a second smoke.
 BENCH=skipped
 if [[ $CODE -eq 0 ]]; then
+    BENCH_ARGS=(--smoke)
+    if [[ -n "${TIER1_BENCH_OUT:-}" ]]; then
+        rm -f "$TIER1_BENCH_OUT"
+        BENCH_ARGS+=(--out "$TIER1_BENCH_OUT")
+    fi
     PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
-        python benchmarks/infer_bench.py --smoke > /dev/null
+        python benchmarks/infer_bench.py "${BENCH_ARGS[@]}" > /dev/null
     BENCH=$?
 fi
 
-echo
-echo "=== tier1 summary ==="
-echo "  result line : $(echo "$TAIL" | grep -E '(passed|failed|error)' | tail -n 1)"
-echo "  collect errs: $ERRORS"
-echo "  doc links   : $([[ $LINKS -eq 0 ]] && echo OK || echo BROKEN)"
-echo "  bench smoke : $([[ "$BENCH" == 0 ]] && echo OK || echo "$BENCH")"
+DURATION=$((SECONDS - T0))
+LINKS_TXT=$([[ $LINKS -eq 0 ]] && echo OK || echo BROKEN)
+BENCH_TXT=$([[ "$BENCH" == 0 ]] && echo OK || echo "$BENCH")
 # pytest problems first — the doc/bench gates must never mask a red suite
 if [[ "$ERRORS" -gt 0 ]]; then
-    echo "  status      : FAIL (collection errors — tests silently missing)"
-    exit 2
+    STATUS="FAIL (collection errors — tests silently missing)"; EXIT=2
 elif [[ $CODE -ne 0 ]]; then
-    echo "  status      : FAIL (exit $CODE)"
-    exit $CODE
+    STATUS="FAIL (pytest exit $CODE)"; EXIT=$CODE
 elif [[ $LINKS -ne 0 ]]; then
-    echo "  status      : FAIL (broken doc links)"
-    exit 3
+    STATUS="FAIL (broken doc links)"; EXIT=3
 elif [[ "$BENCH" != 0 ]]; then
-    echo "  status      : FAIL (infer_bench --smoke)"
-    exit 4
+    STATUS="FAIL (infer_bench --smoke)"; EXIT=4
+else
+    STATUS="PASS"; EXIT=0
 fi
-echo "  status      : PASS"
-exit 0
+
+RESULT_LINE="$RESULT_LINE" ERRORS="$ERRORS" LINKS_TXT="$LINKS_TXT" \
+BENCH_TXT="$BENCH_TXT" STATUS="$STATUS" EXIT_CODE="$EXIT" \
+DURATION="$DURATION" python - <<'EOF'
+import json, os
+json.dump({
+    "result_line": os.environ["RESULT_LINE"].strip(),
+    "collect_errors": int(os.environ["ERRORS"]),
+    "doc_links": os.environ["LINKS_TXT"],
+    "bench_smoke": os.environ["BENCH_TXT"],
+    "status": os.environ["STATUS"],
+    "exit_code": int(os.environ["EXIT_CODE"]),
+    "duration_s": int(os.environ["DURATION"]),
+}, open("tier1_summary.json", "w"), indent=1)
+EOF
+
+echo
+echo "=== tier1 summary ==="
+echo "  result line : $RESULT_LINE"
+echo "  collect errs: $ERRORS"
+echo "  doc links   : $LINKS_TXT"
+echo "  bench smoke : $BENCH_TXT"
+echo "  status      : $STATUS"
+
+if [[ -n "${GITHUB_STEP_SUMMARY:-}" ]]; then
+    {
+        echo "### tier1 (${DURATION}s)"
+        echo ""
+        echo "| gate | result |"
+        echo "|---|---|"
+        echo "| pytest | ${RESULT_LINE:-?} |"
+        echo "| collect errors | $ERRORS |"
+        echo "| doc links | $LINKS_TXT |"
+        echo "| bench smoke | $BENCH_TXT |"
+        echo "| **status** | **$STATUS** |"
+    } >> "$GITHUB_STEP_SUMMARY"
+fi
+
+exit $EXIT

@@ -215,21 +215,26 @@ def forward_folded(folded, images_u8, cfg: SpikformerConfig, *, backend):
     the hardware-shaped path). ``folded`` may be the float tree from
     ``fold_inference_params`` or its int8 quantization
     (``infer.quant.quantize_folded``) — layers carrying a ``scale`` leaf are
-    dispatched with it. Returns (B, num_classes) logits.
+    dispatched with it — and may additionally carry per-layer ``lut`` leaves
+    (the session planner's cached byte-LUT tables, ``infer.session.plan_routes``):
+    the packed backend then runs the unpack-free gather route and the float
+    backend its fold-order emulation, keeping the pair bit-exact. Returns
+    (B, num_classes) logits.
     """
     t = cfg.timesteps
 
     def wssl(z, layer):
         return backend.wssl_lif(z, layer["kernel"], layer["bias"], t=t,
-                                scale=layer.get("scale"))
+                                scale=layer.get("scale"),
+                                lut=layer.get("lut"))
 
     c0 = folded["scs"]["conv0"]
     x = backend.sssc_lif(images_u8, c0["kernel"], c0["bias"], t=t,
-                         scale=c0.get("scale"))
+                         scale=c0.get("scale"), lut=c0.get("lut"))
     for i in range(1, len(cfg.scs_channels)):
         ci = folded["scs"][f"conv{i}"]
         x = backend.zsc_lif(x, ci["kernel"], ci["bias"], t=t,
-                            scale=ci.get("scale"))
+                            scale=ci.get("scale"), lut=ci.get("lut"))
     x = backend.to_tokens(x)
 
     for i in range(cfg.depth):

@@ -2,8 +2,8 @@
 reference to VESTA's unified-PE datapath. See README.md in this directory."""
 from .backends import FloatBackend, PackedBackend, get_backend
 from .quant import quantize_folded, quantize_layer
-from .session import InferenceSession, benchmark_session
+from .session import InferenceSession, benchmark_session, plan_routes
 
 __all__ = ["FloatBackend", "PackedBackend", "get_backend",
-           "InferenceSession", "benchmark_session",
+           "InferenceSession", "benchmark_session", "plan_routes",
            "quantize_folded", "quantize_layer"]

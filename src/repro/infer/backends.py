@@ -22,25 +22,42 @@ the accumulator (see ``infer.quant`` for the math). FloatBackend applies the
 identical scale-folded ops to the dequantized-integer float graph, making it
 the bit-exact *emulation oracle* for the packed int8 route.
 
+Each matmul method also takes an optional ``lut`` leaf — the byte-LUT table
+the session planner cached for that layer (``kernels.lut_matmul``). When
+present, PackedBackend runs the unpack-free gather route and FloatBackend
+runs the *fold-order emulation* of the same reduction tree
+(``lut_matmul_planes``) instead of its single dot: float32 sums are not
+reorderable, so the reference follows the route plan exactly as it already
+follows the int8 threshold fold. Both sessions of a parity pair plan the
+same routes from the same static shapes, which keeps end-to-end logits
+bit-identical.
+
 The CPU route of PackedBackend performs operation-for-operation the same
-float32 arithmetic as FloatBackend (same reshapes, same dots, same reduction
-orders), so their logits are bit-identical — spikes are binary, there is no
-tolerance to hide behind, and the parity tests assert exact equality.
+float32 arithmetic as FloatBackend (same reshapes, same dots or the same
+gather/fold tree, same reduction orders), so their logits are bit-identical
+— spikes are binary, there is no tolerance to hide behind, and the parity
+tests assert exact equality.
 """
 from __future__ import annotations
 
 import jax.numpy as jnp
+from jax import lax
 
 from ..core import unified
 from ..core.lif import V_TH, tflif
-from ..core.spike import (rate_decode, space_to_depth, unpack_timesteps)
+from ..core.spike import bitplanes_u8, rate_decode, space_to_depth
 from ..kernels import ops
+from ..kernels import lut_matmul as lut
 
 
 class FloatBackend:
     """Reference backend: float spike trains through ``core.unified``."""
 
     name = "reference"
+    # route planning reads this: the reference only needs the "lut" leaf as
+    # a *flag* to switch to the fold-order emulation — caching the (C,256,N)
+    # tables into its tree would be dead weight
+    wants_lut_tables = False
 
     @staticmethod
     def _acc_and_vth(op, x, kernel, bias, scale):
@@ -53,18 +70,51 @@ class FloatBackend:
         acc = op(x, kernel.astype(jnp.float32), None) + (bias / scale)
         return acc, V_TH / scale
 
-    def sssc_lif(self, images_u8, kernel, bias, *, t: int, scale=None):
-        y, vth = self._acc_and_vth(unified.sssc, images_u8, kernel, bias,
+    # -- fold-order emulations of the byte-LUT route (plan says "lut") ------
+    # Same signatures as the ``core.unified`` ops they stand in for; the
+    # arithmetic replays lut_matmul's defined reduction tree on float planes.
+
+    @staticmethod
+    def _wssl_emu(spikes, kernel, bias=None):
+        t, lead, d = spikes.shape[0], spikes.shape[1:-1], spikes.shape[-1]
+        planes = spikes.reshape(t, -1, d).astype(jnp.float32)
+        y = lut.lut_matmul_planes(planes, kernel)       # (t, M, N)
+        if bias is not None:
+            y = y + bias.astype(y.dtype)
+        return y.reshape((t, *lead, kernel.shape[-1]))
+
+    @classmethod
+    def _zsc_emu(cls, spikes, kernel, bias=None):
+        return cls._wssl_emu(space_to_depth(spikes, 2),
+                             kernel.reshape(-1, kernel.shape[-1]), bias)
+
+    @staticmethod
+    def _sssc_emu(image_u8, kernel, bias=None):
+        x = space_to_depth(image_u8, 2)                 # (B, h, w, 4C) u8
+        lead = x.shape[:-1]
+        planes = bitplanes_u8(x).reshape(8, -1, x.shape[-1])
+        per = lut.lut_matmul_planes(planes, kernel)     # (8, M, N)
+        y = lut.shift_sum_fold(per)
+        if bias is not None:
+            y = y + bias.astype(y.dtype)
+        return y.reshape((*lead, kernel.shape[-1]))
+
+    def sssc_lif(self, images_u8, kernel, bias, *, t: int, scale=None,
+                 lut=None):
+        op = unified.sssc if lut is None else self._sssc_emu
+        y, vth = self._acc_and_vth(op, images_u8, kernel, bias,
                                    scale)                # (B, H/2, W/2, F)
         y = jnp.broadcast_to(y[None], (t, *y.shape))    # image constant in T
         return tflif(y, v_th=vth)
 
-    def zsc_lif(self, x, kernel, bias, *, t: int, scale=None):
-        y, vth = self._acc_and_vth(unified.zsc, x, kernel, bias, scale)
+    def zsc_lif(self, x, kernel, bias, *, t: int, scale=None, lut=None):
+        op = unified.zsc if lut is None else self._zsc_emu
+        y, vth = self._acc_and_vth(op, x, kernel, bias, scale)
         return tflif(y, v_th=vth)
 
-    def wssl_lif(self, x, kernel, bias, *, t: int, scale=None):
-        y, vth = self._acc_and_vth(unified.wssl, x, kernel, bias, scale)
+    def wssl_lif(self, x, kernel, bias, *, t: int, scale=None, lut=None):
+        op = unified.wssl if lut is None else self._wssl_emu
+        y, vth = self._acc_and_vth(op, x, kernel, bias, scale)
         return tflif(y, v_th=vth)
 
     def stdp_lif(self, q, k, v, *, heads: int, scale: float, t: int):
@@ -104,6 +154,14 @@ class PackedBackend:
     def __init__(self, *, pallas: bool | None = None):
         self.pallas = pallas
 
+    @property
+    def wants_lut_tables(self) -> bool:
+        """Route planning reads this: the (C,256,N) tables only matter where
+        the CPU gather route will actually execute — the Pallas branch
+        ignores them, so a Pallas-pinned (or on-TPU) session should not pay
+        the precompute or carry the dead weight."""
+        return not ops.use_pallas(self.pallas)
+
     def _lif(self, acc, bias, scale):
         """acc (T, ...) -> (G, ...) packed; int8 layers fold their
         per-channel scale into the bias/threshold, never the accumulator."""
@@ -117,21 +175,22 @@ class PackedBackend:
         """How an int8 kernel enters the packed matmul (single spot)."""
         return kernel if scale is None else kernel.astype(jnp.float32)
 
-    def sssc_lif(self, images_u8, kernel, bias, *, t: int, scale=None):
+    def sssc_lif(self, images_u8, kernel, bias, *, t: int, scale=None,
+                 lut=None):
         x = space_to_depth(images_u8, 2)                # (B,H/2,W/2,4C) u8
         acc = ops.sssc_linear(x, self._w(kernel, scale), None,
-                              pallas=self.pallas)
+                              pallas=self.pallas, table=lut)
         acc = jnp.broadcast_to(acc[None], (t, *acc.shape))
         return self._lif(acc, bias, scale)              # (G,B,H/2,W/2,F) u8
 
-    def zsc_lif(self, x, kernel, bias, *, t: int, scale=None):
+    def zsc_lif(self, x, kernel, bias, *, t: int, scale=None, lut=None):
         acc = ops.spike_linear(space_to_depth(x, 2), self._w(kernel, scale),
-                               None, t=t, pallas=self.pallas)
+                               None, t=t, pallas=self.pallas, table=lut)
         return self._lif(acc, bias, scale)
 
-    def wssl_lif(self, x, kernel, bias, *, t: int, scale=None):
+    def wssl_lif(self, x, kernel, bias, *, t: int, scale=None, lut=None):
         acc = ops.spike_linear(x, self._w(kernel, scale), None, t=t,
-                               pallas=self.pallas)
+                               pallas=self.pallas, table=lut)
         return self._lif(acc, bias, scale)
 
     def stdp_lif(self, q, k, v, *, heads: int, scale: float, t: int):
@@ -141,9 +200,12 @@ class PackedBackend:
         def to_heads(z):
             return z.reshape(g, b, n, heads, dh).transpose(0, 1, 3, 2, 4)
 
+        # route="auto": the LUT score path engages at large token counts
+        # (bit-identical either way — binary q/k/v keep every accumulator an
+        # exact integer, so no reference-side emulation is needed)
         acc = ops.stdp_attention_packed(
             to_heads(q), to_heads(k), to_heads(v), t=t, scale=scale,
-            pallas=self.pallas)                         # (t, B, H, N, dh)
+            pallas=self.pallas, route="auto")           # (t, B, H, N, dh)
         att = ops.tflif_pack(acc, pallas=self.pallas)   # (G, B, H, N, dh) u8
         return att.transpose(0, 1, 3, 2, 4).reshape(g, b, n, d)
 
@@ -162,8 +224,13 @@ class PackedBackend:
         return x.reshape(g, b, h * w, c)
 
     def rate(self, x, *, t: int):
-        spikes = unpack_timesteps(x, t)                 # (T, B, N, D) float
-        return rate_decode(spikes, axis=0).mean(axis=1)
+        # popcount readout: sum of bits per neuron without unpacking. The
+        # count is an exact integer (any summation order), and the /t
+        # mirrors rate_decode's mean division, so this matches the float
+        # reference bit for bit.
+        counts = lax.population_count(x).astype(jnp.int32).sum(axis=0)
+        rate = counts.astype(jnp.float32) / jnp.float32(t)
+        return rate.mean(axis=1)
 
 
 def get_backend(name, *, pallas: bool | None = None):

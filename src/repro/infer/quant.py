@@ -35,6 +35,23 @@ import jax.numpy as jnp
 WEIGHT_DTYPES = ("float32", "int8")
 
 
+def map_folded_layers(folded, fn):
+    """Apply ``fn(path, layer) -> layer`` to every conv/linear layer dict of
+    a ``fold_inference_params`` tree, rebuilding the scs/blocks schema and
+    passing every other top-level key (head, ...) through untouched. The ONE
+    place the folded-tree layer schema is enumerated — quantization, route
+    planning, and annotation stripping all walk through here."""
+    out = dict(folded)
+    out["scs"] = {name: fn(f"scs/{name}", layer)
+                  for name, layer in folded["scs"].items()}
+    out["blocks"] = {
+        bname: {grp: {wn: fn(f"blocks/{bname}/{grp}/{wn}", layer)
+                      for wn, layer in sub.items()}
+                for grp, sub in blk.items()}
+        for bname, blk in folded["blocks"].items()}
+    return out
+
+
 def quantize_layer(layer):
     """{kernel, bias} -> {kernel: int8, scale: (N,) f32, bias} per-channel
     symmetric quantization over the output-channel (last) axis."""
@@ -52,14 +69,4 @@ def quantize_folded(folded):
     int8 ``kernel``; the float head is passed through unchanged. Backends
     detect the ``scale`` leaf and switch to the threshold-folded LIF.
     """
-    out = {"scs": {}, "blocks": {}, "head": folded["head"]}
-    for name, layer in folded["scs"].items():
-        out["scs"][name] = quantize_layer(layer)
-    for bname, blk in folded["blocks"].items():
-        fb = {"ssa": {}, "mlp": {}}
-        for wn, layer in blk["ssa"].items():
-            fb["ssa"][wn] = quantize_layer(layer)
-        for fc, layer in blk["mlp"].items():
-            fb["mlp"][fc] = quantize_layer(layer)
-        out["blocks"][bname] = fb
-    return out
+    return map_folded_layers(folded, lambda _, layer: quantize_layer(layer))

@@ -18,17 +18,80 @@ bit planes (1 bit/spike in storage); "reference" runs the float
 """
 from __future__ import annotations
 
-import functools
 import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from ..core import spikformer
 from ..core.spikformer import SpikformerConfig, fold_inference_params
+from ..kernels import lut_matmul
+from ..kernels.ops import choose_route
 from .backends import get_backend
-from .quant import WEIGHT_DTYPES, quantize_folded
+from .quant import WEIGHT_DTYPES, map_folded_layers, quantize_folded
+
+
+def plan_routes(folded, cfg: SpikformerConfig, *, batch_size: int,
+                max_table_bytes: int = lut_matmul.MAX_TABLE_BYTES,
+                build_tables: bool = True):
+    """Per-layer matmul route planning: the byte-LUT's precompute lives here.
+
+    For every folded layer this computes the packed-route matmul shape
+    (M, K, N, G) the compiled step will see, asks ``kernels.ops.choose_route``
+    whether the unpack-free byte-LUT datapath wins there, and — where it does
+    — builds the (C, 256, N) chunk-partial-sum table ONCE and caches it in
+    the returned tree as a ``lut`` leaf (so the per-batch work is pure
+    gather-and-accumulate). Layers routed "unpack" are left untouched.
+
+    Both backends consume a tree annotated by the same deterministic plan:
+    the packed backend executes the gather route, the float reference
+    backend the fold-order emulation — the planning decision, like the int8
+    threshold fold, is part of the math both sides agree on. The reference
+    side never gathers, so ``build_tables=False`` (what ``InferenceSession``
+    uses for backends with ``wants_lut_tables = False``) annotates LUT
+    layers with a cheap boolean flag instead of the (C, 256, N) tables.
+    Returns ``(annotated_tree, plan)`` with ``plan`` mapping layer paths to
+    routes.
+    """
+    t = cfg.timesteps
+    g = -(-t // 8)
+    m_tok = batch_size * cfg.tokens
+    plan = {}
+
+    def shapes_for(path):
+        """Packed-route matmul shape (m, live planes, groups) at ``path``."""
+        if path.startswith("scs/conv"):
+            i = int(path.removeprefix("scs/conv"))
+            m = batch_size * (cfg.img_size // 2 ** (i + 1)) ** 2
+            # conv0 is SSSC: always 8 value planes, one group
+            return (m, 8, 1) if i == 0 else (m, t, g)
+        return m_tok, t, g
+
+    def annotate(path, layer):
+        wq = layer["kernel"]
+        m, tt, gg = shapes_for(path)
+        k, n = wq.shape
+        route = choose_route(m=m, k=k, n=n, g=gg, t=tt,
+                             weights_are_int=jnp.issubdtype(
+                                 wq.dtype, jnp.integer),
+                             max_table_bytes=max_table_bytes)
+        plan[path] = route
+        # drop any stale annotation first — re-planning an annotated tree
+        # must not leave a previous plan's "lut" leaf on an unpack layer
+        layer = {k2: v for k2, v in layer.items() if k2 != "lut"}
+        if route == "lut":
+            layer["lut"] = lut_matmul.build_lut(wq) if build_tables else True
+        return layer
+
+    return map_folded_layers(folded, annotate), plan
+
+
+def strip_lut_annotations(folded):
+    """Remove every ``lut`` leaf from a folded tree (shallow copies only) —
+    what ``route="unpack"`` uses to pin the mirrored-dot oracle route even
+    on a tree a previous planner annotated."""
+    return map_folded_layers(
+        folded, lambda _, l: {k: v for k, v in l.items() if k != "lut"})
 
 
 class InferenceSession:
@@ -37,7 +100,8 @@ class InferenceSession:
     def __init__(self, params, cfg: SpikformerConfig, *, backend="packed",
                  batch_size: int = 8, folded: bool = False,
                  weight_dtype: str | None = None,
-                 pallas: bool | None = None, jit: bool = True):
+                 pallas: bool | None = None, jit: bool = True,
+                 route: str = "auto"):
         """``params`` is a training param tree (BN folded here) unless
         ``folded=True``, in which case it is already a fold_inference_params
         tree (possibly pre-quantized). ``batch_size`` is the static compile
@@ -50,10 +114,19 @@ class InferenceSession:
         the float route; with int8, the "reference" backend is the bit-exact
         float *emulation* of the same quantized math). The default ``None``
         means "whatever the tree carries": float32 for a fresh fold, int8
-        for a pre-quantized tree."""
+        for a pre-quantized tree.
+
+        ``route="auto"`` runs the per-layer planner (``plan_routes``): layers
+        where the unpack-free byte-LUT datapath wins get a cached table;
+        ``route="unpack"`` pins every layer to the mirrored-dot oracle
+        route. Parity pairs must be built with the same ``route`` argument —
+        the plan is part of the math."""
         if weight_dtype is not None and weight_dtype not in WEIGHT_DTYPES:
             raise ValueError(f"unknown weight_dtype {weight_dtype!r}; "
                              f"expected one of {WEIGHT_DTYPES}")
+        if route not in ("auto", "unpack"):
+            raise ValueError(f"unknown route {route!r}; "
+                             "expected 'auto' or 'unpack'")
         self.cfg = cfg
         self.batch_size = int(batch_size)
         self.backend = get_backend(backend, pallas=pallas)
@@ -68,6 +141,15 @@ class InferenceSession:
             self.folded = quantize_folded(self.folded)
         self.weight_dtype = ("int8" if weight_dtype == "int8"
                              or already_quantized else "float32")
+        if route == "auto":
+            self.folded, self.plan = plan_routes(
+                self.folded, cfg, batch_size=self.batch_size,
+                build_tables=getattr(self.backend, "wants_lut_tables", True))
+        else:
+            # the pin must hold even for a pre-annotated folded tree: stale
+            # "lut" leaves would silently keep the LUT route alive
+            self.folded = strip_lut_annotations(self.folded)
+            self.plan = {}
 
         def fwd(folded_tree, images):
             return spikformer.forward_folded(folded_tree, images, cfg,
@@ -110,22 +192,28 @@ class InferenceSession:
 
 
 def benchmark_session(sess: InferenceSession, *, batches: int = 4,
-                      seed: int = 0):
+                      seed: int = 0, repeats: int = 3):
     """Throughput probe: images/sec over ``batches`` full compiled batches
-    of random uint8 images (excludes compile via warmup). Returns a dict."""
+    of random uint8 images (excludes compile via warmup). The window is
+    repeated ``repeats`` times and the best wall-time wins — the standard
+    throughput convention, and the only way to get a stable number on a
+    noisy shared machine. Returns a dict."""
     compile_s = sess.warmup()
-    imgs = np.asarray(jax.random.randint(
-        jax.random.PRNGKey(seed), sess.input_shape, 0, 256, jnp.uint8))
-    t0 = time.perf_counter()
-    for _ in range(batches):
-        jax.block_until_ready(sess._fwd(sess.folded, jnp.asarray(imgs)))
-    wall = time.perf_counter() - t0
+    imgs = jax.random.randint(jax.random.PRNGKey(seed), sess.input_shape,
+                              0, 256, jnp.uint8)
+    wall = float("inf")
+    for _ in range(max(1, repeats)):
+        t0 = time.perf_counter()
+        for _ in range(batches):
+            jax.block_until_ready(sess._fwd(sess.folded, imgs))
+        wall = min(wall, time.perf_counter() - t0)
     n = batches * sess.batch_size
     return {
         "backend": sess.backend.name,
         "weight_dtype": sess.weight_dtype,
         "batch_size": sess.batch_size,
         "images": n,
+        "repeats": repeats,
         "compile_s": round(compile_s, 3),
         "wall_s": round(wall, 4),
         "images_per_s": round(n / wall, 2),

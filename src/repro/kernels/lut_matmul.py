@@ -1,0 +1,245 @@
+"""Unpack-free byte-LUT matmul: the CPU analogue of VESTA's multiplexer PE.
+
+A binary spike turns multiply into *select* — VESTA's PE is a multiplexer,
+not a multiplier. The software analogue on a byte-packed datapath: one uint8
+of packed spikes *selects* a precomputed partial sum over its 8-row weight
+chunk. Per chunk ``c`` of 8 weight rows, ``table[c, b, :]`` holds the partial
+sum of rows whose bit is set in byte ``b``; the matmul then reduces to
+gather-and-accumulate over the packed bytes — the ``(T, M, K)`` unpacked
+plane tensor is never materialized, and the arithmetic drops from
+``T*M*K*N`` multiply-adds to ``T*M*(K/8)*N`` gathered adds.
+
+Bit layout plumbing: the inter-layer packed representation is *time*-packed
+(bit j of byte ``[g, m, k]`` = timestep ``8g+j`` of neuron ``k`` — see
+``core.spike``), while the LUT selects over 8 consecutive *K positions*. The
+bridge is an 8x8 bit-matrix transpose (``plane_indices``), done wordwise on
+two uint32 lanes (Hacker's Delight 7-3) — ~20 elementwise ops per 8 bytes,
+several times cheaper than unpacking those 64 bits to float.
+
+Exactness contract (the part that keeps the parity suite single-sourced):
+float32 sums are not reorderable, and XLA's ``dot`` reduction order is both
+unspecified and shape-dependent, so the LUT route does NOT try to match the
+single-dot unpack oracle bitwise. Instead the route *defines* its reduction
+tree — ascending-bit multiply-add folds inside a chunk, ascending-chunk adds
+across chunks — built exclusively from elementwise IEEE ops whose per-element
+results are shape-independent. ``lut_matmul_planes`` replays the identical
+op sequence on unpacked {0,1} float planes; it is the bit-exact oracle for
+this route (and what ``infer.backends.FloatBackend`` executes for LUT-planned
+layers, the same emulation role it already plays for int8's threshold fold).
+For integer weights (the int8 route) every partial sum is an exact small
+integer, so all routes agree bitwise regardless of order; tables are then
+held in int16 — half the gather bandwidth, still exact (|sum of 8| <= 1016,
+chunk accumulation in int32).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax import lax
+
+K_CHUNK = 8  # weight rows selected by one byte — the PE fan-in of the paper
+
+
+def num_k_chunks(k: int) -> int:
+    """Number of 8-row weight chunks (= LUT gather steps) for K input rows."""
+    assert k >= 1, k
+    return -(-k // K_CHUNK)
+
+
+def table_bytes(k: int, n: int, weights_are_int: bool) -> int:
+    """Size of the cached LUT for a (K, N) kernel — the memory side of the
+    memory/compute trade-off the dispatch heuristic weighs."""
+    return num_k_chunks(k) * 256 * n * (2 if weights_are_int else 4)
+
+
+def _is_int_kernel(w) -> bool:
+    return jnp.issubdtype(w.dtype, jnp.integer)
+
+
+# ---------------------------------------------------------------------------
+# 8x8 bit-matrix transpose (time-packed bytes -> K-packed index bytes)
+# ---------------------------------------------------------------------------
+
+def bit_transpose8(b):
+    """Transpose an 8x8 bit matrix held as 8 bytes, elementwise over leading
+    axes: input ``b`` (..., 8) uint8 with rows i = bytes; output (..., 8)
+    uint8 where ``out[..., j]`` bit i == ``b[..., i]`` bit j.
+
+    Wordwise Hacker's Delight 7-3 on two little-endian uint32 lanes; the
+    byte<->word marshalling is a free bitcast, and the lane swap absorbs the
+    big-endian byte order the original algorithm assumes.
+    """
+    w = lax.bitcast_convert_type(
+        b.reshape(*b.shape[:-1], 2, 4), jnp.uint32)         # (..., 2) LE words
+    x, y = w[..., 1], w[..., 0]
+    t = (x ^ (x >> 7)) & jnp.uint32(0x00AA00AA)
+    x = x ^ t ^ (t << 7)
+    t = (y ^ (y >> 7)) & jnp.uint32(0x00AA00AA)
+    y = y ^ t ^ (t << 7)
+    t = (x ^ (x >> 14)) & jnp.uint32(0x0000CCCC)
+    x = x ^ t ^ (t << 14)
+    t = (y ^ (y >> 14)) & jnp.uint32(0x0000CCCC)
+    y = y ^ t ^ (t << 14)
+    t = (x & jnp.uint32(0xF0F0F0F0)) | ((y >> 4) & jnp.uint32(0x0F0F0F0F))
+    y = ((x << 4) & jnp.uint32(0xF0F0F0F0)) | (y & jnp.uint32(0x0F0F0F0F))
+    x = t
+    out = jnp.stack([y, x], axis=-1)
+    return lax.bitcast_convert_type(out, jnp.uint8).reshape(b.shape)
+
+
+def _pad_k(x, k: int, value=0):
+    """Pad the trailing (K) axis up to a multiple of 8."""
+    pad = num_k_chunks(k) * K_CHUNK - k
+    if pad:
+        widths = [(0, 0)] * (x.ndim - 1) + [(0, pad)]
+        x = jnp.pad(x, widths, constant_values=value)
+    return x
+
+
+def plane_indices(x_packed):
+    """Time-packed plane groups -> per-plane LUT index bytes.
+
+    Args:
+      x_packed: (G, ..., K) uint8, bit j of [g, ..., k] = plane ``8g+j`` of
+        input k (temporal planes for WSSL/ZSC, value bit-planes for SSSC
+        with G == 1). Any number of row axes — the transpose runs natively
+        on the caller's layout (no in-graph flatten; see ``ref.tflif_ref``).
+
+    Returns:
+      (G*8, ..., C) uint8, C = ceil(K/8): bit i of [p, ..., c] = plane p of
+      input ``8c+i`` — the byte that selects chunk c's LUT entry for that
+      row. Planes past the live count are all-zero bytes (the packing
+      invariant keeps dead bits zero); callers slice ``[:t]``.
+    """
+    g, k = x_packed.shape[0], x_packed.shape[-1]
+    lead = x_packed.shape[1:-1]
+    c = num_k_chunks(k)
+    x = _pad_k(x_packed, k).reshape(g, *lead, c, K_CHUNK)
+    idx = bit_transpose8(x)                                 # [..., j] bit i
+    return jnp.moveaxis(idx, -1, 1).reshape(g * K_CHUNK, *lead, c)
+
+
+# ---------------------------------------------------------------------------
+# Table build and gather-accumulate (the defined reduction tree)
+# ---------------------------------------------------------------------------
+
+def build_lut(w):
+    """Precompute the 256 chunk partial sums: (K, N) -> (C, 256, N) table.
+
+    ``table[c, b, :]`` = ascending-bit fold of ``bit_i(b) * w[8c+i, :]`` —
+    elementwise multiply-adds only, so every entry equals the corresponding
+    ``lut_matmul_planes`` partial bit for bit. Integer kernels produce an
+    int16 table (exact, half the gather bandwidth); float kernels float32.
+    """
+    k, n = w.shape
+    c = num_k_chunks(k)
+    if _is_int_kernel(w):
+        wc = _pad_k(w.astype(jnp.int16).T, k).T.reshape(c, K_CHUNK, n)
+        bits = ((jnp.arange(256, dtype=jnp.int16)[:, None]
+                 >> jnp.arange(K_CHUNK, dtype=jnp.int16)) & 1)
+        tbl = jnp.zeros((c, 256, n), jnp.int16)
+    else:
+        wc = _pad_k(w.astype(jnp.float32).T, k).T.reshape(c, K_CHUNK, n)
+        bits = ((jnp.arange(256)[:, None] >> jnp.arange(K_CHUNK)) & 1
+                ).astype(jnp.float32)
+        tbl = jnp.zeros((c, 256, n), jnp.float32)
+    for i in range(K_CHUNK):
+        tbl = tbl + bits[None, :, i, None] * wc[:, None, i, :]
+    return tbl
+
+
+def lut_matmul(idx, table, *, block_n: int | None = None):
+    """Gather-and-accumulate: (..., C) index bytes x (C, 256, N) table ->
+    (..., N) f32 accumulators (any number of row axes).
+
+    Reduction is the defined ascending-chunk sequential fold. ``block_n``
+    tiles the output columns to bound the (R, M, N)-sized gather
+    intermediates (the K tiling is the chunk fold itself); tiling never
+    changes per-element op order, so exactness is unaffected.
+    """
+    c, _, n = table.shape
+    assert idx.shape[-1] == c, (idx.shape, table.shape)
+    if block_n is not None and n > block_n:
+        outs = [lut_matmul(idx, table[..., s:s + block_n])
+                for s in range(0, n, block_n)]
+        return jnp.concatenate(outs, axis=-1)
+    acc_int = jnp.issubdtype(table.dtype, jnp.integer)
+    gathered = jnp.take(table[0], idx[..., 0], axis=0)
+    y = gathered.astype(jnp.int32) if acc_int else gathered
+    for cc in range(1, c):
+        g = jnp.take(table[cc], idx[..., cc], axis=0)
+        y = y + (g.astype(jnp.int32) if acc_int else g)
+    return y.astype(jnp.float32)
+
+
+def lut_matmul_planes(planes, w):
+    """The route's bit-exact oracle on unpacked planes: (R, M, K) {0,1}
+    float32 x (K, N) -> (R, M, N) f32 via the IDENTICAL reduction tree as
+    ``build_lut`` + ``lut_matmul`` (ascending-bit multiply-add fold per
+    chunk, ascending-chunk adds). Elementwise IEEE ops only — no ``dot`` —
+    so results are independent of R/M batching and match the packed gather
+    route bit for bit. This is what ``FloatBackend`` runs for LUT-planned
+    layers.
+    """
+    r, m, k = planes.shape
+    n = w.shape[-1]
+    c = num_k_chunks(k)
+    wf = _pad_k(w.astype(jnp.float32).T, k).T.reshape(c, K_CHUNK, n)
+    pc = _pad_k(planes, k).reshape(r, m, c, K_CHUNK)
+    part = jnp.zeros((r, m, c, n), jnp.float32)
+    for i in range(K_CHUNK):
+        part = part + pc[..., i, None] * wf[None, None, :, i, :]
+    y = part[:, :, 0, :]
+    for cc in range(1, c):
+        y = y + part[:, :, cc, :]
+    return y
+
+
+def shift_sum_fold(per_plane):
+    """SSSC bit-plane combine with a defined order: (8, ..., N) per-plane
+    accumulators -> (..., N), ``y = fold_p y + per[p] * 2^p`` ascending.
+    Power-of-two scaling is exact; both the packed LUT route and its float
+    emulation share this fold (XLA's ``sum(axis=0)`` reduce order is
+    unspecified, so neither route may use it)."""
+    y = per_plane[0]
+    for p in range(1, 8):
+        y = y + per_plane[p] * jnp.float32(2.0 ** p)
+    return y
+
+
+# ---------------------------------------------------------------------------
+# Dispatch heuristic
+# ---------------------------------------------------------------------------
+
+# Cost-model constants, fit on the CPU microbenchmarks that motivated this
+# route (see docs/architecture.md): a gathered table row costs ~4x a dot
+# FMA per element but covers 8 weight rows; the bit transpose replaces the
+# 4-bytes-per-bit unpack with ~2.5 byte-ops per packed byte.
+_GATHER_COST = 4.0     # per gathered table element, relative to one dot FMA
+_TRANSPOSE_COST = 2.5  # per packed input byte
+_UNPACK_COST = 8.0     # per unpacked plane element (u8 -> f32 write)
+MAX_TABLE_BYTES = 1 << 24  # 16 MiB per-layer table cap (memory trade-off)
+
+
+def choose_route(*, m: int, k: int, n: int, g: int, t: int,
+                 weights_are_int: bool = False,
+                 max_table_bytes: int = MAX_TABLE_BYTES) -> str:
+    """Pick "lut" or "unpack" for a packed matmul of (t live planes, M rows,
+    K inputs, N outputs, G plane groups) on the CPU route.
+
+    The LUT route wins when its gather traffic (t*M*C*N table elements)
+    undercuts the dot's t*M*K*N FMAs plus the t*M*K unpack writes it
+    deletes; it loses when the table outgrows cache — int16 tables halve
+    that pressure — or the per-layer table cap. The fallback is always the
+    unpack route, which stays the bit-exact mirror of the float reference.
+    """
+    c = num_k_chunks(k)
+    tbl = table_bytes(k, n, weights_are_int)
+    if tbl > max_table_bytes:
+        return "unpack"
+    gather_scale = _GATHER_COST * (0.5 if weights_are_int else 1.0)
+    # cache pressure: once the table spills L2, gathered rows stop hitting
+    cache_penalty = 1.0 if tbl <= (1 << 21) else 3.0
+    lut_cost = (t * m * c * n * gather_scale * cache_penalty
+                + g * m * k * _TRANSPOSE_COST)
+    unpack_cost = t * m * k * (n + _UNPACK_COST)
+    return "lut" if lut_cost < unpack_cost else "unpack"

@@ -18,11 +18,31 @@ import jax
 import jax.numpy as jnp
 
 from . import ref
+from . import lut_matmul as lut
+from .lut_matmul import choose_route  # noqa: F401  (re-export: the dispatch heuristic)
 from .spike_matmul import spike_matmul as _spike_matmul_pallas
 from .tflif import tflif_fused as _tflif_pallas
 from .stdp_attention import stdp_attention as _stdp_pallas
 from .flash_attention import flash_attention as _flash_pallas
 from ..core.spike import bitplanes_u8, num_plane_groups, unpack_timesteps
+
+
+def _resolve_route(route, table, *, m, k, n, g, t, weights_are_int):
+    """Route resolution for the packed CPU matmuls.
+
+    ``None`` is the *safe* default: LUT only when the caller (the session
+    planner) supplies a prebuilt table — so un-planned callers keep the
+    single-dot unpack route that mirrors the float reference bit for bit.
+    "auto" applies ``choose_route`` inline; "lut"/"unpack" force.
+    """
+    if route is None:
+        return "lut" if table is not None else "unpack"
+    if route == "auto":
+        return choose_route(m=m, k=k, n=n, g=g, t=t,
+                            weights_are_int=weights_are_int)
+    if route not in ("lut", "unpack"):
+        raise ValueError(f"unknown packed-matmul route {route!r}")
+    return route
 
 
 def on_tpu() -> bool:
@@ -119,7 +139,8 @@ def flash_attention(q, k, v, *, scale: float, causal: bool = True,
 # the Pallas route trades that for the fused uint8 kernels.
 
 def spike_linear(x_packed, w, bias=None, *, t: int,
-                 pallas: bool | None = None, **blocks):
+                 pallas: bool | None = None, route: str | None = None,
+                 table=None, **blocks):
     """Packed WSSL (weight-stationary spiking linear).
 
     Args:
@@ -127,25 +148,45 @@ def spike_linear(x_packed, w, bias=None, *, t: int,
         bit j of group g = the timestep-(8g+j) spike of that neuron.
       w: (K, N) weights; bias: optional (N,) added to every timestep.
       t: number of live timesteps (bits past t-1 must be zero).
-      pallas: backend override.
+      pallas: backend override (the Pallas branch ignores ``route``).
+      route: CPU-route selection — None (LUT iff ``table`` given, else the
+        unpack oracle), "auto" (the ``choose_route`` heuristic), or a forced
+        "lut" / "unpack".
+      table: prebuilt ``lut_matmul.build_lut(w)`` result, cached by the
+        session planner so the 256-entry chunk sums are paid once per layer,
+        not per batch.
 
     Returns:
-      (t, ..., N) f32 per-timestep accumulators. On the CPU route all t
-      planes of all groups are folded into the row dim of ONE dot (exactly
-      ``unified.wssl``, hence bit-exact); the Pallas route runs the grouped
-      kernel, one weight fetch per group of 8 planes.
+      (t, ..., N) f32 per-timestep accumulators. On the CPU unpack route all
+      t planes of all groups are folded into the row dim of ONE dot (exactly
+      ``unified.wssl``, hence bit-exact vs the float reference); the LUT
+      route gathers chunk partial sums byte-wise with no unpacked tensor
+      (bit-exact vs ``lut.lut_matmul_planes``, the fold-order oracle the
+      reference backend emulates for planned layers). The Pallas route runs
+      the grouped kernel, one weight fetch per group of 8 planes.
     """
     g = x_packed.shape[0]
     assert g == num_plane_groups(t), (g, t)
     lead, k = x_packed.shape[1:-1], x_packed.shape[-1]
-    x2 = x_packed.reshape(g, -1, k)
-    m = x2.shape[1]
+    m = 1
+    for d in lead:
+        m *= d
     n = w.shape[-1]
     if use_pallas(pallas):
+        x2 = x_packed.reshape(g, -1, k)
         per8 = _spike_matmul_pallas(x2, w, mode="per_plane",
                                     interpret=not on_tpu(), **blocks)
         per = per8.reshape(g * 8, m, n)[:t]                # (t, M, N)
+    elif _resolve_route(route, table, m=m, k=k, n=n, g=g, t=t,
+                        weights_are_int=lut._is_int_kernel(w)) == "lut":
+        tbl = lut.build_lut(w) if table is None else table
+        idx = lut.plane_indices(x_packed)[:t]              # (t, ..., C)
+        per = lut.lut_matmul(idx, tbl)                     # (t, ..., N)
+        if bias is not None:
+            per = per + bias.astype(per.dtype)
+        return per
     else:
+        x2 = x_packed.reshape(g, -1, k)
         planes = unpack_timesteps(x2, t)                   # (t, M, K)
         per = (planes.reshape(t * m, k) @ w.astype(jnp.float32)
                ).reshape(t, m, n)
@@ -154,7 +195,8 @@ def spike_linear(x_packed, w, bias=None, *, t: int,
     return per.reshape((t, *lead, n))
 
 
-def sssc_linear(x_u8, w, bias=None, *, pallas: bool | None = None, **blocks):
+def sssc_linear(x_u8, w, bias=None, *, pallas: bool | None = None,
+                route: str | None = None, table=None, **blocks):
     """Packed SSSC (shift-and-sum spiking conv, as a linear over 8 bit-planes).
 
     Args:
@@ -162,6 +204,10 @@ def sssc_linear(x_u8, w, bias=None, *, pallas: bool | None = None, **blocks):
         byte is value-plane p, combined with scale 2^p). Always exactly 8
         planes — SSSC never grows a plane-group axis.
       w: (K, N) weights; bias: optional (N,).
+      route, table: CPU-route selection as in ``spike_linear`` — the value
+        bytes are the LUT index source directly (an 8x8 bit transpose turns
+        K value bytes into ceil(K/8) per-plane index bytes), and the 2^p
+        plane combine uses the defined ``shift_sum_fold`` order.
 
     Returns:
       (..., N) f32 accumulators, ``y = sum_p 2^p (plane_p . W)`` — identical
@@ -171,9 +217,18 @@ def sssc_linear(x_u8, w, bias=None, *, pallas: bool | None = None, **blocks):
     lead, k = x_u8.shape[:-1], x_u8.shape[-1]
     x2 = x_u8.reshape(-1, k)
     m = x2.shape[0]
+    n = w.shape[-1]
     if use_pallas(pallas):
         y = _spike_matmul_pallas(x2, w, mode="shift_sum",
                                  interpret=not on_tpu(), **blocks)
+    elif _resolve_route(route, table, m=m, k=k, n=n, g=1, t=8,
+                        weights_are_int=lut._is_int_kernel(w)) == "lut":
+        tbl = lut.build_lut(w) if table is None else table
+        idx = lut.plane_indices(x_u8[None])                # (8, ..., C)
+        y = lut.shift_sum_fold(lut.lut_matmul(idx, tbl))   # (..., N)
+        if bias is not None:
+            y = y + bias.astype(y.dtype)
+        return y
     else:
         planes = bitplanes_u8(x2)                          # (8, M, K)
         per = (planes.reshape(8 * m, k) @ w.astype(jnp.float32)
@@ -198,14 +253,22 @@ def tflif_pack(acc, bias=None, *, t: int | None = None, tau: float = 2.0,
       v_th: scalar threshold, or an array broadcastable to acc.shape[1:] —
         per-channel thresholds carry the int8 weight-scale fold
         (spike iff h >= v_th/s without rescaling the accumulator).
-      t: override for T (defaults to acc.shape[0]).
+      t: process only the first t timesteps of acc (defaults to all of
+        them); honored identically on every branch.
 
     Returns:
       (G, ...) uint8 plane groups, G = ceil(T/8); bit j of group g = spike at
       timestep 8g + j.
     """
-    t = acc.shape[0] if t is None else t
+    if t is not None and t != acc.shape[0]:
+        acc = acc[:t]                  # honor the override on every branch
+    t = acc.shape[0]
     lead = acc.shape[1:]
+    if not use_pallas(pallas):
+        # CPU oracle runs natively N-D: in-graph flattens force XLA CPU's
+        # fusion emitter into ~10x-slower reshape-chasing loop nests, and
+        # broadcast shape never changes per-element results.
+        return ref.tflif_ref(acc, bias, tau=tau, v_th=v_th)
     x2 = acc.reshape(t, -1)
     if bias is not None:
         bias = jnp.broadcast_to(bias, lead).reshape(-1)
@@ -215,8 +278,12 @@ def tflif_pack(acc, bias=None, *, t: int | None = None, tau: float = 2.0,
     return packed.reshape((packed.shape[0], *lead))
 
 
+STDP_LUT_MIN_TOKENS = 128  # below this, score-table build cost can't amortize
+
+
 def stdp_attention_packed(q_packed, k_packed, v_packed, *, t: int,
-                          scale: float, pallas: bool | None = None, **blocks):
+                          scale: float, pallas: bool | None = None,
+                          route: str | None = None, **blocks):
     """Packed STDP: softmax-free attention over temporal plane groups.
 
     Args:
@@ -226,12 +293,47 @@ def stdp_attention_packed(q_packed, k_packed, v_packed, *, t: int,
         batch-heads grid dim of the tile-fused kernel.
       t: live timesteps; scale: output scale (power of two in Spikformer, so
         results stay exact).
+      route: CPU-route selection. The LUT route computes the score matmul
+        Q K^T by byte-gather — Q is never unpacked; K (the "weight" side)
+        is, to build per-(t, head) tables, so this only pays off when the
+        token count N amortizes the 256-entry build ("auto": N >=
+        STDP_LUT_MIN_TOKENS). Binary q/k/v make every accumulator an exact
+        integer, so all routes agree bit for bit regardless of order.
 
     Returns:
       (t, ..., N, Dh) f32 attention accumulators.
     """
     lead = q_packed.shape[1:-2]
     n, dh = q_packed.shape[-2:]
+    g = q_packed.shape[0]
+
+    if not use_pallas(pallas):
+        if route == "auto":
+            # score tables are per-(t, batch*head) and rebuilt every call (K
+            # is an activation): require both enough tokens to amortize the
+            # 256-entry build AND a bounded transient footprint, mirroring
+            # MAX_TABLE_BYTES on the linear layers
+            bh_all = 1
+            for d in lead:
+                bh_all *= d
+            tables_bytes = t * bh_all * lut.num_k_chunks(dh) * 256 * n * 4
+            route = ("lut" if n >= STDP_LUT_MIN_TOKENS
+                     and tables_bytes <= lut.MAX_TABLE_BYTES else "unpack")
+        if route == "lut":
+            bh = 1
+            for d in lead:
+                bh *= d
+            idx_q = lut.plane_indices(
+                q_packed.reshape(g, bh * n, dh))[:t].reshape(t, bh, n, -1)
+            k_pl = unpack_timesteps(k_packed.reshape(g, bh, n, dh), t)
+            v_pl = unpack_timesteps(v_packed.reshape(g, bh, n, dh), t)
+            tables = jax.vmap(jax.vmap(lut.build_lut))(
+                k_pl.transpose(0, 1, 3, 2))                # (t,BH,C,256,N)
+            s = jax.vmap(jax.vmap(lut.lut_matmul))(idx_q, tables)
+            out = jnp.einsum("tbnm,tbmd->tbnd", s, v_pl) * scale
+            return out.reshape((t, *lead, n, dh))
+        if route not in (None, "unpack"):
+            raise ValueError(f"unknown packed-stdp route {route!r}")
 
     def unfold(z):
         planes = unpack_timesteps(z.reshape(z.shape[0], -1, n, z.shape[-1]),

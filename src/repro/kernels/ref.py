@@ -26,19 +26,28 @@ def spike_matmul_ref(x_packed, w, *, mode: str = "per_plane"):
 
 
 def tflif_ref(x, bias=None, *, tau: float = 2.0, v_th=1.0):
-    """x: (T, M) -> (G, M) uint8 packed spikes, G = ceil(T/8); bit j of group
-    g is the spike at timestep 8g+j. The membrane state is carried across
-    group boundaries (one sequential scan over all T). ``v_th`` is a scalar
-    or an (M,) per-neuron threshold (the int8 weight-scale fold)."""
-    t_steps, m = x.shape
+    """x: (T, ...) -> (G, ...) uint8 packed spikes, G = ceil(T/8); bit j of
+    group g is the spike at timestep 8g+j. The membrane state is carried
+    across group boundaries (one sequential scan over all T). ``bias`` and
+    ``v_th`` are scalars or arrays broadcastable against ``x.shape[1:]``
+    (per-neuron thresholds carry the int8 weight-scale fold).
+
+    Runs natively on any rank — flattening the neuron axes in-graph forces
+    XLA CPU's fusion emitter into reshape-chasing loop nests that cost ~10x;
+    broadcasting over the natural trailing axes vectorizes cleanly, and
+    broadcast shape never changes per-element IEEE results, so exactness
+    contracts are unaffected.
+    """
+    t_steps = x.shape[0]
+    lead = x.shape[1:]
     groups = num_plane_groups(t_steps)
     if bias is None:
-        bias = jnp.zeros((m,), jnp.float32)
+        bias = jnp.float32(0.0)
     v_th = jnp.asarray(v_th, jnp.float32)
-    v = jnp.zeros((m,), jnp.float32)
+    v = jnp.zeros(lead, jnp.float32)
     out = []
     for g in range(groups):
-        packed = jnp.zeros((m,), jnp.uint8)
+        packed = jnp.zeros(lead, jnp.uint8)
         for j in range(min(8, t_steps - 8 * g)):
             h = v + (x[8 * g + j].astype(jnp.float32) + bias - v) / tau
             s = h >= v_th
