@@ -60,6 +60,17 @@ def compare(current: dict, baseline: dict, *, min_ratio: float):
         failures.append("no comparable sweep points between current and "
                         "baseline — re-commit a matching baseline")
         return failures
+    # engine-level serving rows (informational: absolute fps on a CI runner
+    # is noise, but the rows must exist so the serving path can't silently
+    # drop out of the benchmark)
+    for s in current.get("serving", []):
+        print(f"serving T={s['timesteps']}/{s['weight_dtype']}: "
+              f"{s['fps']:.1f} fps (target {s.get('paper_fps', 30.0):.0f}), "
+              f"p95 {s.get('latency_p95_s')}s, "
+              f"pad_waste {s.get('pad_waste')}")
+    if baseline.get("serving") and not current.get("serving"):
+        failures.append("baseline has engine-level serving rows but the "
+                        "current record lost them")
     geomean = 1.0
     for r in ratios:
         geomean *= r

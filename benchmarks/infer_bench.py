@@ -1,6 +1,6 @@
 """Inference throughput: packed-bit datapath vs float reference, end to end.
 
-Times the jit-compiled fixed-batch ``InferenceSession`` forward for both
+Times the jit-compiled fixed-batch compiled step for both
 backends over a sweep of (timesteps, weight_dtype) points — by default
 T in {4, 16} x {float32, int8}, so the perf trajectory captures both the
 plane-group loop overhead (T=16 -> 2 uint8 groups per neuron) and the int8
@@ -9,13 +9,18 @@ to the committed ``BENCH_infer.json`` trajectory at the repo root, so
 successive PRs accumulate a perf history; ``benchmarks/compare_bench.py``
 gates CI against it).
 
-Three sessions per point keep the comparison honest:
+Three compiled models per point keep the comparison honest:
   * packed (auto-planned)     — the byte-LUT/unpack datapath being measured;
   * reference (route=unpack)  — the plain single-dot float graph, the
     throughput *denominator* (the planner's fold-order emulation would slow
     the reference and flatter the speedup, so it is never timed as baseline);
-  * reference (auto-planned)  — the packed session's bit-exact partner, used
+  * reference (auto-planned)  — the packed model's bit-exact partner, used
     only for the exactness probe. A benchmark of a wrong path is worthless.
+
+On top of the per-step sweep, a SERVING sweep drives requests through the
+micro-batching engine (multi-bucket dispatch) and records achieved fps vs
+the paper's 30 fps target, p50/p95 latency, and pad waste — the
+engine-level numbers production cares about, in the same trajectory.
 
   PYTHONPATH=src python benchmarks/infer_bench.py [--batch-size 8] [--out [f]]
   PYTHONPATH=src python benchmarks/infer_bench.py --smoke     # tiny, CI gate
@@ -35,7 +40,8 @@ import numpy as np
 
 from repro.core.spike import num_plane_groups
 from repro.core.spikformer import SpikformerConfig, init as spik_init
-from repro.infer import InferenceSession, benchmark_session
+from repro.infer import (ExecutionPlan, MicroBatchEngine, benchmark_session,
+                         compile as infer_compile)
 
 REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
 DEFAULT_OUT = REPO_ROOT / "BENCH_infer.json"
@@ -46,19 +52,17 @@ def run_point(params, cfg, *, timesteps: int, weight_dtype: str,
     """One sweep point: packed vs plain float reference at (T, weight_dtype),
     with the planned-reference exactness gate."""
     cfg = dataclasses.replace(cfg, timesteps=timesteps)
-    packed = InferenceSession(params, cfg, backend="packed",
-                              batch_size=batch_size, weight_dtype=weight_dtype)
-    ref_plain = InferenceSession(params, cfg, backend="reference",
-                                 batch_size=batch_size,
-                                 weight_dtype=weight_dtype, route="unpack")
-    ref_planned = InferenceSession(params, cfg, backend="reference",
-                                   batch_size=batch_size,
-                                   weight_dtype=weight_dtype)
+    plan = ExecutionPlan(weight_dtype=weight_dtype,
+                         batch_buckets=(batch_size,))
+    packed = infer_compile(params, cfg, plan, backend="packed")
+    ref_plain = infer_compile(params, cfg, plan, backend="reference",
+                              route="unpack")
+    ref_planned = infer_compile(params, cfg, plan, backend="reference")
 
     # correctness gate: identical logits on one probe batch (the planned
-    # reference is the packed session's bit-exact partner)
+    # reference is the packed model's bit-exact partner)
     probe = jax.random.randint(jax.random.PRNGKey(seed + 1),
-                               packed.input_shape, 0, 256, jnp.uint8)
+                               packed.input_shape(), 0, 256, jnp.uint8)
     exact = bool((np.asarray(packed.logits(probe))
                   == np.asarray(ref_planned.logits(probe))).all())
 
@@ -68,14 +72,14 @@ def run_point(params, cfg, *, timesteps: int, weight_dtype: str,
         "reference": benchmark_session(ref_plain, batches=batches,
                                        seed=seed + 2, repeats=repeats),
     }
-    lut_layers = sum(1 for r in packed.plan.values() if r == "lut")
+    lut_layers = sum(1 for r in packed.plan.routes.values() if r == "lut")
     return {
         "timesteps": timesteps,
         "weight_dtype": weight_dtype,
         "plane_groups": num_plane_groups(timesteps),
         "bit_exact": exact,
         "lut_layers": lut_layers,
-        "planned_layers": len(packed.plan),
+        "planned_layers": len(packed.plan.routes),
         "packed": results["packed"],
         "reference": results["reference"],
         "packed_speedup": round(results["packed"]["images_per_s"]
@@ -87,11 +91,40 @@ def run_point(params, cfg, *, timesteps: int, weight_dtype: str,
     }
 
 
+def run_serving(params, cfg, *, timesteps: int, weight_dtype: str,
+                buckets, requests: int, seed: int) -> dict:
+    """Engine-level serving point: Poisson-ish mixed-size requests through
+    the micro-batching engine over a multi-bucket compiled model. Reports
+    achieved fps vs the paper's 30 fps target, p50/p95 latency, and pad
+    waste (the multi-bucket-dispatch metric)."""
+    cfg = dataclasses.replace(cfg, timesteps=timesteps)
+    model = infer_compile(params, cfg,
+                          ExecutionPlan(backend="packed",
+                                        weight_dtype=weight_dtype,
+                                        batch_buckets=tuple(buckets)))
+    compile_s = model.warmup()
+    eng = MicroBatchEngine(model)
+    rng = np.random.default_rng(seed + 3)
+    shape = model.input_shape()[1:]
+    for rid in range(requests):
+        n = int(rng.integers(1, 4))          # 1-3 images per request
+        eng.submit(rng.integers(0, 256, (n, *shape), dtype=np.uint8))
+    eng.run()
+    stats = eng.stats()
+    return {
+        "timesteps": timesteps,
+        "weight_dtype": weight_dtype,
+        "compile_s": round(compile_s, 3),
+        **stats,
+    }
+
+
 def run(*, batch_size: int = 8, batches: int = 4, repeats: int = 3,
         seed: int = 0, img_size: int = 32, dim: int = 64, depth: int = 2,
         mode: str = "full",
         sweep=((4, "float32"), (4, "int8"), (16, "float32"), (16, "int8")),
-        ) -> dict:
+        serving_sweep=((4, "float32"), (16, "int8")),
+        serving_requests: int = 24) -> dict:
     cfg = SpikformerConfig().scaled(img_size=img_size, dim=dim, depth=depth)
     params = spik_init(jax.random.PRNGKey(seed), cfg)
 
@@ -99,6 +132,11 @@ def run(*, batch_size: int = 8, batches: int = 4, repeats: int = 3,
                         batch_size=batch_size, batches=batches,
                         repeats=repeats, seed=seed)
               for t, wd in sweep]
+    buckets = (max(1, batch_size // 4), batch_size)
+    serving = [run_serving(params, cfg, timesteps=t, weight_dtype=wd,
+                           buckets=buckets, requests=serving_requests,
+                           seed=seed)
+               for t, wd in serving_sweep]
 
     # PR-1-compatible trajectory fields come from the (4, float32) point
     # when the sweep carries one, else the first point
@@ -120,6 +158,7 @@ def run(*, batch_size: int = 8, batches: int = 4, repeats: int = 3,
         "packed_speedup": base["packed_speedup"],
         "activation_traffic_ratio": base["activation_traffic_ratio"],
         "sweep": points,
+        "serving": serving,
         "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
     }
     return record
@@ -173,7 +212,8 @@ def main(argv=None):
               repeats=args.repeats, seed=args.seed,
               mode="smoke" if args.smoke else "full")
     if args.smoke:
-        kw.update(img_size=16, dim=32, depth=1)
+        kw.update(img_size=16, dim=32, depth=1, serving_requests=6,
+                  serving_sweep=((4, "float32"),))
 
     record = run(**kw)
     print(json.dumps(record))

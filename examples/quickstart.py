@@ -56,13 +56,15 @@ logits, _ = apply(params, img, cfg)
 print(f"5) Spikformer V2 (reduced): image {img.shape} -> logits "
       f"{logits.shape}, all inter-layer traffic binary spikes")
 
-# --- 6. packed inference: any T, int8 weights --------------------------------
-from repro.infer import InferenceSession
+# --- 6. packed inference: compile once under a plan, any T, int8 weights -----
+from repro.infer import ExecutionPlan, compile
 
 cfg16 = cfg.scaled(timesteps=16)           # T=16 -> 2 plane groups
-sess = InferenceSession(params, cfg16, backend="packed", batch_size=2,
-                        weight_dtype="int8")
-print(f"6) packed int8 inference at T=16: logits {sess.logits(img).shape} "
+plan = ExecutionPlan(backend="packed", weight_dtype="int8",
+                     batch_buckets=(2,))
+model = compile(params, cfg16, plan)
+print(f"6) packed int8 inference at T=16: logits {model.logits(img).shape} "
       f"(uint8 plane-group activations, int8 weights, scale folded into "
-      f"the LIF threshold)")
+      f"the LIF threshold; plan routes {len(model.plan.routes)} layers, "
+      f"serializable via model.plan.to_json())")
 print("quickstart OK")

@@ -1,0 +1,191 @@
+"""Autotune the ``choose_route`` cost constants on this host.
+
+The dispatch heuristic (``kernels/lut_matmul.py:choose_route``) compares a
+cost model of the byte-LUT gather route against the unpack-then-dot route:
+
+    lut_cost    = t*M*C*N * gather_cost * [cache_penalty]  +  G*M*K * transpose_cost
+    unpack_cost = t*M*K * (N + unpack_cost)
+
+in units of one dot FMA. The committed defaults were hand-fit to one
+container's CPU; this script refits them FROM MEASUREMENT: it times both
+routes of ``ops.spike_linear`` over a small (M, K, N, G) grid, solves the
+model's coefficients by least squares (everything is linear in the
+constants once normalized by the FMA unit), and emits the result as an
+``ExecutionPlan`` JSON fragment — paste or ``--out`` it, then
+
+    plan = ExecutionPlan.from_json(open("routes.json").read())
+    model = compile(params, cfg, plan)
+
+serves under the tuned dispatch. Only the *decisions* change; every route
+stays bit-exact, so a bad fit costs throughput, never correctness.
+
+  PYTHONPATH=src python scripts/autotune_routes.py [--fast] [--out routes.json]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops
+from repro.kernels import lut_matmul as lut
+from repro.kernels.lut_matmul import RouteConstants
+
+# (m, k, n, g) grid: spans the repo's real layer shapes (conv stem rows x
+# small K through encoder linears) without taking minutes. t = 8*g keeps
+# every plane live.
+GRID = [
+    (64, 32, 16, 1), (64, 64, 64, 1), (256, 32, 64, 1), (256, 64, 16, 1),
+    (512, 32, 32, 1), (512, 64, 64, 1), (1024, 12, 8, 1), (1024, 64, 32, 2),
+    (2048, 32, 16, 1), (256, 128, 128, 1),
+]
+FAST_GRID = GRID[:5]
+
+
+def time_call(fn, *args, repeats: int = 3, inner: int = 4) -> float:
+    """Best-of-``repeats`` wall time of ``inner`` back-to-back calls,
+    compile excluded (one untimed call first)."""
+    jax.block_until_ready(fn(*args))
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        for _ in range(inner):
+            out = fn(*args)
+        jax.block_until_ready(out)
+        best = min(best, (time.perf_counter() - t0) / inner)
+    return best
+
+
+def measure_point(m: int, k: int, n: int, g: int, *, repeats: int = 3,
+                  seed: int = 0) -> dict:
+    """Time unpack vs LUT for one (M, K, N, G) shape. Returns a sample."""
+    t = 8 * g
+    key = jax.random.PRNGKey(seed)
+    x = jax.random.randint(key, (g, m, k), 0, 256, jnp.uint8)
+    w = jax.random.normal(jax.random.fold_in(key, 1), (k, n), jnp.float32)
+    table = lut.build_lut(w)
+
+    unpack = jax.jit(lambda xx: ops.spike_linear(xx, w, t=t, pallas=False,
+                                                 route="unpack"))
+    gather = jax.jit(lambda xx: ops.spike_linear(xx, w, t=t, pallas=False,
+                                                 route="lut", table=table))
+    return {
+        "m": m, "k": k, "n": n, "g": g, "t": t,
+        "c": lut.num_k_chunks(k),
+        "table_bytes": lut.table_bytes(k, n, False),
+        "unpack_s": time_call(unpack, x, repeats=repeats),
+        "lut_s": time_call(gather, x, repeats=repeats),
+    }
+
+
+def measure_grid(grid=GRID, *, repeats: int = 3, seed: int = 0) -> list:
+    samples = []
+    for m, k, n, g in grid:
+        s = measure_point(m, k, n, g, repeats=repeats, seed=seed)
+        print(json.dumps(s))
+        samples.append(s)
+    return samples
+
+
+def _lstsq(X, y):
+    """Raw least-squares coefficients — callers validate signs themselves
+    (a negative unit cost means the sample set cannot identify the model,
+    and the right answer is the committed defaults, not a clamp)."""
+    coef, *_ = np.linalg.lstsq(X, y, rcond=None)
+    return coef
+
+
+def fit_constants(samples: list, *,
+                  base: RouteConstants = RouteConstants()) -> RouteConstants:
+    """Fit (gather_cost, transpose_cost, unpack_cost) from measured route
+    times; cache constants refit only when the grid spans the cache knee.
+
+    unpack_s ~ alpha*(t*m*k*n) + alpha*unpack_cost*(t*m*k): a 2-coefficient
+    linear fit gives the FMA unit ``alpha`` (seconds per FMA) and the
+    unpack write cost in FMA units. lut_s ~ alpha*gather*(t*m*c*n) +
+    alpha*transpose*(g*m*k) reuses that unit, so all constants land in the
+    dimensionless form ``choose_route`` compares. Falls back to the
+    committed defaults for anything the sample set cannot identify.
+    """
+    sm = [s for s in samples if s["unpack_s"] > 0 and s["lut_s"] > 0]
+    if len(sm) < 3:
+        return base
+
+    fma = np.array([s["t"] * s["m"] * s["k"] * s["n"] for s in sm], float)
+    wr = np.array([s["t"] * s["m"] * s["k"] for s in sm], float)
+    uy = np.array([s["unpack_s"] for s in sm], float)
+    a, b = _lstsq(np.stack([fma, wr], 1), uy)
+    if not np.isfinite(a) or a <= 0:
+        return base                     # FMA unit unidentifiable: keep defaults
+    unpack_cost = float(b / a)
+
+    small = [s for s in sm if s["table_bytes"] <= base.cache_bytes]
+    large = [s for s in sm if s["table_bytes"] > base.cache_bytes]
+
+    def fit_lut(subset):
+        gath = np.array([s["t"] * s["m"] * s["c"] * s["n"] for s in subset],
+                        float)
+        tr = np.array([s["g"] * s["m"] * s["k"] for s in subset], float)
+        ly = np.array([s["lut_s"] for s in subset], float)
+        gc, tc = _lstsq(np.stack([gath, tr], 1), ly)
+        return float(gc / a), float(tc / a)
+
+    gather_cost, transpose_cost = fit_lut(small if len(small) >= 2 else sm)
+    cache_penalty = base.cache_penalty
+    if len(large) >= 2 and len(small) >= 2:
+        g_large, _ = fit_lut(large)
+        if gather_cost > 0:
+            cache_penalty = float(np.clip(g_large / gather_cost, 1.0, 16.0))
+
+    clip = lambda v, lo, hi, dflt: (float(np.clip(v, lo, hi))
+                                    if np.isfinite(v) and v > 0 else dflt)
+    return RouteConstants(
+        gather_cost=clip(gather_cost, 0.1, 64.0, base.gather_cost),
+        transpose_cost=clip(transpose_cost, 0.1, 64.0, base.transpose_cost),
+        unpack_cost=clip(unpack_cost, 0.1, 256.0, base.unpack_cost),
+        int_gather_discount=base.int_gather_discount,
+        cache_bytes=base.cache_bytes,
+        cache_penalty=cache_penalty,
+    )
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--fast", action="store_true",
+                    help="half the grid, one repeat (CI/smoke)")
+    ap.add_argument("--repeats", type=int, default=None)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default=None,
+                    help="write the ExecutionPlan JSON fragment here "
+                         "(stdout always gets it)")
+    args = ap.parse_args(argv)
+
+    grid = FAST_GRID if args.fast else GRID
+    repeats = args.repeats or (1 if args.fast else 3)
+    samples = measure_grid(grid, repeats=repeats, seed=args.seed)
+    constants = fit_constants(samples)
+
+    # the committable artifact: a fragment ExecutionPlan.from_json accepts
+    fragment = {"route_constants": constants.to_dict()}
+    text = json.dumps(fragment, indent=1, sort_keys=True)
+    print(text)
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write(text + "\n")
+
+    # sanity: how often the tuned model agrees with measurement on the grid
+    agree = sum(
+        (ops.choose_route(m=s["m"], k=s["k"], n=s["n"], g=s["g"], t=s["t"],
+                          constants=constants) == "lut")
+        == (s["lut_s"] < s["unpack_s"]) for s in samples)
+    print(json.dumps({"grid_points": len(samples),
+                      "tuned_agreement": f"{agree}/{len(samples)}"}))
+    return constants
+
+
+if __name__ == "__main__":
+    main()

@@ -216,7 +216,8 @@ def forward_folded(folded, images_u8, cfg: SpikformerConfig, *, backend):
     ``fold_inference_params`` or its int8 quantization
     (``infer.quant.quantize_folded``) — layers carrying a ``scale`` leaf are
     dispatched with it — and may additionally carry per-layer ``lut`` leaves
-    (the session planner's cached byte-LUT tables, ``infer.session.plan_routes``):
+    (the route-planning pass's cached byte-LUT tables,
+    ``infer.compile.plan_route_tables``):
     the packed backend then runs the unpack-free gather route and the float
     backend its fold-order emulation, keeping the pair bit-exact. Returns
     (B, num_classes) logits.

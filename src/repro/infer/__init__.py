@@ -1,9 +1,30 @@
 """Packed-bit Spikformer inference: the bridge from the float training
-reference to VESTA's unified-PE datapath. See README.md in this directory."""
+reference to VESTA's unified-PE datapath, behind a compile/serve split —
+``compile(params, cfg, plan)`` lowers to a ``CompiledModel``,
+``MicroBatchEngine`` serves it. See README.md in this directory."""
 from .backends import FloatBackend, PackedBackend, get_backend
+from .compile import (CompiledModel, ExecutionPlan, compile, fold_bn,
+                      lower, plan_route_tables, quantize_weights,
+                      strip_lut_annotations)
+from .engine import PAPER_FPS, MicroBatchEngine, Request
 from .quant import quantize_folded, quantize_layer
+from .registry import (BackendSpec, backend_spec, list_backends,
+                       register_backend, unregister_backend)
 from .session import InferenceSession, benchmark_session, plan_routes
 
-__all__ = ["FloatBackend", "PackedBackend", "get_backend",
-           "InferenceSession", "benchmark_session", "plan_routes",
-           "quantize_folded", "quantize_layer"]
+__all__ = [
+    # compile half
+    "ExecutionPlan", "CompiledModel", "compile",
+    "fold_bn", "quantize_weights", "plan_route_tables", "lower",
+    "strip_lut_annotations",
+    # serve half
+    "MicroBatchEngine", "Request", "PAPER_FPS",
+    # backends + registry
+    "FloatBackend", "PackedBackend", "get_backend",
+    "BackendSpec", "register_backend", "unregister_backend",
+    "backend_spec", "list_backends",
+    # quantization
+    "quantize_folded", "quantize_layer",
+    # deprecated shim
+    "InferenceSession", "benchmark_session", "plan_routes",
+]

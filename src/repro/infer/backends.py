@@ -43,6 +43,7 @@ from __future__ import annotations
 import jax.numpy as jnp
 from jax import lax
 
+from . import registry
 from ..core import unified
 from ..core.lif import V_TH, tflif
 from ..core.spike import bitplanes_u8, rate_decode, space_to_depth
@@ -233,12 +234,29 @@ class PackedBackend:
         return rate.mean(axis=1)
 
 
-def get_backend(name, *, pallas: bool | None = None):
-    """Backend by name ("packed" | "reference"), or pass an instance through."""
-    if not isinstance(name, str):
-        return name
-    if name == "packed":
-        return PackedBackend(pallas=pallas)
-    if name in ("reference", "float"):
-        return FloatBackend()
-    raise ValueError(f"unknown inference backend {name!r}")
+# ---------------------------------------------------------------------------
+# Registration: the built-in backends enter the registry here; ``get_backend``
+# is now a registry lookup (kept importable from this module for callers of
+# the pre-registry API).
+# ---------------------------------------------------------------------------
+
+# keyword-only factories: a misspelled option key must raise TypeError,
+# not silently run the default route
+registry.register_backend(
+    "packed",
+    lambda *, pallas=None: PackedBackend(pallas=pallas),
+    weight_dtypes=("float32", "int8"),
+    device_kinds=("cpu", "tpu"),
+    wants_lut_tables=None,      # instance decides: tables only off-Pallas
+    overwrite=True)             # survive importlib.reload of this module
+
+registry.register_backend(
+    "reference",
+    lambda *, pallas=None: FloatBackend(),   # accepts + ignores pallas
+    weight_dtypes=("float32", "int8"),
+    device_kinds=("cpu", "gpu", "tpu"),
+    wants_lut_tables=False,     # plan flags only, never (C,256,N) tables
+    aliases=("float",),
+    overwrite=True)
+
+get_backend = registry.get_backend

@@ -1,0 +1,425 @@
+"""Compile/serve split: ``compile(params, cfg, plan) -> CompiledModel``.
+
+Everything decided *before the first batch* lives in an ``ExecutionPlan`` —
+backend, weight dtype, the static batch buckets the step is compiled for,
+the byte-LUT table budget, and the ``choose_route`` cost constants (host
+properties, autotunable). Compilation is then an explicit pass pipeline
+over the folded tree:
+
+    fold_bn  ->  quantize_weights  ->  plan_route_tables  ->  lower
+
+each pass a named function, so tests and the autotuner can run them in
+isolation. The result is a ``CompiledModel``: a jit-compiled fixed-shape
+step per batch bucket plus the resolved plan (per-layer routes filled in),
+which ``to_json``/``from_json`` turn into a committable artifact — serving
+a model under a reviewed plan replays exactly the route decisions the plan
+records, never a fresh heuristic call.
+
+    from repro.infer import ExecutionPlan, compile
+    plan = ExecutionPlan(backend="packed", weight_dtype="int8",
+                         batch_buckets=(2, 8))
+    model = compile(params, cfg, plan)
+    logits = model.logits(images_u8)          # any N; bucketed + padded
+    pathlib.Path("plan.json").write_text(model.plan.to_json())
+
+The serving loop over a ``CompiledModel`` is ``repro.infer.engine``;
+``InferenceSession`` survives as a deprecation shim over this function.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+
+from . import backends as _backends  # noqa: F401  (registers built-ins)
+from . import registry
+from .quant import WEIGHT_DTYPES, map_folded_layers, quantize_folded
+from ..core import spikformer
+from ..core.spikformer import SpikformerConfig, fold_inference_params
+from ..kernels import lut_matmul
+from ..kernels.lut_matmul import RouteConstants
+from ..kernels.ops import choose_route
+
+ROUTES = ("auto", "unpack")
+
+
+@dataclasses.dataclass(frozen=True)
+class ExecutionPlan:
+    """Everything decided before the first batch, as one committable value.
+
+    ``batch_buckets`` are the static shapes the step compiles for; the
+    engine picks the smallest bucket covering its backlog, so low-occupancy
+    traffic stops padding to the full batch. Route planning runs once at
+    the LARGEST bucket and every bucket shares the annotated tree — the
+    per-image math is row-independent, which is what keeps logits identical
+    across buckets (the multi-bucket parity contract).
+
+    ``routes`` is the resolved per-layer plan (path -> "lut" | "unpack").
+    ``None`` means "decide at compile time via ``route_constants``"; a
+    non-None mapping PINS the decisions — that is what a deserialized plan
+    carries, so a committed plan is replayed, not re-derived.
+    """
+    backend: str = "packed"
+    weight_dtype: str | None = None     # None: whatever the tree carries
+    batch_buckets: tuple[int, ...] = (8,)
+    max_table_bytes: int = lut_matmul.MAX_TABLE_BYTES
+    route: str = "auto"                 # "auto" | "unpack"
+    route_constants: RouteConstants = dataclasses.field(
+        default_factory=RouteConstants)
+    routes: dict | None = None          # resolved: layer path -> route
+    backend_options: dict = dataclasses.field(default_factory=dict)
+
+    def __post_init__(self):
+        if self.route not in ROUTES:
+            raise ValueError(f"unknown route {self.route!r}; "
+                             f"expected one of {ROUTES}")
+        if (self.weight_dtype is not None
+                and self.weight_dtype not in WEIGHT_DTYPES):
+            raise ValueError(f"unknown weight_dtype {self.weight_dtype!r}; "
+                             f"expected one of {WEIGHT_DTYPES}")
+        buckets = tuple(sorted({int(b) for b in self.batch_buckets}))
+        if not buckets or buckets[0] < 1:
+            raise ValueError(f"batch_buckets must be >= 1, got "
+                             f"{self.batch_buckets!r}")
+        object.__setattr__(self, "batch_buckets", buckets)
+        if isinstance(self.route_constants, dict):
+            object.__setattr__(self, "route_constants",
+                               RouteConstants.from_dict(self.route_constants))
+
+    @property
+    def plan_batch(self) -> int:
+        """The bucket route planning keys its (M, K, N, G) shapes on."""
+        return self.batch_buckets[-1]
+
+    def to_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["batch_buckets"] = list(self.batch_buckets)
+        return d
+
+    def to_json(self, *, indent: int | None = 1) -> str:
+        if not isinstance(self.backend, str):
+            raise TypeError("plans holding a backend *instance* are not "
+                            "serializable; register it and use the name")
+        return json.dumps(self.to_dict(), indent=indent, sort_keys=True)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "ExecutionPlan":
+        known = {f.name for f in dataclasses.fields(cls)}
+        bad = set(d) - known
+        if bad:
+            raise ValueError(f"unknown ExecutionPlan keys {sorted(bad)}; "
+                             f"expected a subset of {sorted(known)}")
+        d = dict(d)
+        if "batch_buckets" in d:
+            d["batch_buckets"] = tuple(d["batch_buckets"])
+        return cls(**d)
+
+    @classmethod
+    def from_json(cls, text: str) -> "ExecutionPlan":
+        """Accepts a full plan or any fragment of one (autotune emits just
+        ``{"route_constants": ...}``); missing fields keep their defaults."""
+        return cls.from_dict(json.loads(text))
+
+
+# ---------------------------------------------------------------------------
+# The pass pipeline. Each pass is a named function over the folded tree so
+# tests and the autotuner can run them in isolation.
+# ---------------------------------------------------------------------------
+
+def fold_bn(params, cfg: SpikformerConfig, *, folded: bool = False):
+    """Pass 1 — BN folding: training params -> inference tree of
+    {kernel, bias} layers (``core.spikformer.fold_inference_params``).
+    ``folded=True`` passes a pre-folded (possibly pre-quantized) tree
+    through untouched."""
+    return params if folded else fold_inference_params(params, cfg)
+
+
+def quantize_weights(tree, weight_dtype: str | None):
+    """Pass 2 — weight quantization. Returns ``(tree, resolved_dtype)``.
+
+    ``None`` resolves to whatever the tree carries (int8 for a
+    pre-quantized tree, float32 for a fresh fold); an explicit "float32"
+    on an already-quantized tree fails loudly rather than silently running
+    int8."""
+    if weight_dtype is not None and weight_dtype not in WEIGHT_DTYPES:
+        raise ValueError(f"unknown weight_dtype {weight_dtype!r}; "
+                         f"expected one of {WEIGHT_DTYPES}")
+    already_quantized = "scale" in tree["scs"]["conv0"]
+    if weight_dtype == "float32" and already_quantized:
+        raise ValueError(
+            "weight_dtype='float32' requested but the folded tree is "
+            "already int8-quantized; pass the float tree or drop the "
+            "weight_dtype argument")
+    if weight_dtype == "int8" and not already_quantized:
+        tree = quantize_folded(tree)
+    resolved = ("int8" if weight_dtype == "int8" or already_quantized
+                else "float32")
+    return tree, resolved
+
+
+def plan_route_tables(folded, cfg: SpikformerConfig, *, batch_size: int,
+                      max_table_bytes: int = lut_matmul.MAX_TABLE_BYTES,
+                      build_tables: bool = True,
+                      constants: RouteConstants | None = None,
+                      routes: dict | None = None):
+    """Pass 3 — per-layer matmul route planning: the byte-LUT's precompute.
+
+    For every folded layer this computes the packed-route matmul shape
+    (M, K, N, G) the compiled step will see at ``batch_size`` and decides
+    between the unpack-free byte-LUT datapath and the unpack-then-dot
+    oracle — via ``kernels.ops.choose_route`` under ``constants`` when
+    ``routes`` is None, or by REPLAYING a pinned ``routes`` mapping (what a
+    deserialized plan carries). Where the LUT wins, the (C, 256, N)
+    chunk-partial-sum table is built ONCE and cached in the returned tree
+    as a ``lut`` leaf, so the per-batch work is pure gather-and-accumulate.
+
+    Both backends of a parity pair consume trees annotated by the same
+    deterministic plan: the packed backend executes the gather route, the
+    float reference the fold-order emulation — the planning decision, like
+    the int8 threshold fold, is part of the math both sides agree on. The
+    reference side never gathers, so ``build_tables=False`` (what
+    ``compile()`` uses for backends whose capability says no tables)
+    annotates LUT layers with a cheap boolean flag instead.
+
+    Returns ``(annotated_tree, plan)`` with ``plan`` mapping layer paths
+    to routes.
+    """
+    t = cfg.timesteps
+    g = -(-t // 8)
+    m_tok = batch_size * cfg.tokens
+    plan = {}
+
+    def shapes_for(path):
+        """Packed-route matmul shape (m, live planes, groups) at ``path``."""
+        if path.startswith("scs/conv"):
+            i = int(path.removeprefix("scs/conv"))
+            m = batch_size * (cfg.img_size // 2 ** (i + 1)) ** 2
+            # conv0 is SSSC: always 8 value planes, one group
+            return (m, 8, 1) if i == 0 else (m, t, g)
+        return m_tok, t, g
+
+    def annotate(path, layer):
+        wq = layer["kernel"]
+        if routes is None:
+            m, tt, gg = shapes_for(path)
+            k, n = wq.shape
+            route = choose_route(m=m, k=k, n=n, g=gg, t=tt,
+                                 weights_are_int=jnp.issubdtype(
+                                     wq.dtype, jnp.integer),
+                                 max_table_bytes=max_table_bytes,
+                                 constants=constants)
+        else:
+            try:
+                route = routes[path]
+            except KeyError:
+                raise ValueError(
+                    f"pinned route plan has no entry for layer {path!r} — "
+                    "the plan was built for a different config") from None
+            if route not in ("lut", "unpack"):
+                raise ValueError(f"pinned route {route!r} for {path!r}; "
+                                 "expected 'lut' or 'unpack'")
+        plan[path] = route
+        # drop any stale annotation first — re-planning an annotated tree
+        # must not leave a previous plan's "lut" leaf on an unpack layer
+        layer = {k2: v for k2, v in layer.items() if k2 != "lut"}
+        if route == "lut":
+            layer["lut"] = (lut_matmul.build_lut(wq) if build_tables
+                            else True)
+        return layer
+
+    return map_folded_layers(folded, annotate), plan
+
+
+def strip_lut_annotations(folded):
+    """Remove every ``lut`` leaf from a folded tree (shallow copies only) —
+    what ``route="unpack"`` uses to pin the mirrored-dot oracle route even
+    on a tree a previous planner annotated."""
+    return map_folded_layers(
+        folded, lambda _, l: {k: v for k, v in l.items() if k != "lut"})
+
+
+def lower(folded, cfg: SpikformerConfig, backend, *, jit: bool = True):
+    """Pass 4 — lowering: the annotated tree becomes one step callable
+    (jitted unless ``jit=False``; each batch bucket compiles its own
+    fixed-shape executable under it on first use / warmup)."""
+    def fwd(folded_tree, images):
+        return spikformer.forward_folded(folded_tree, images, cfg,
+                                         backend=backend)
+
+    return jax.jit(fwd) if jit else fwd
+
+
+# ---------------------------------------------------------------------------
+# compile() and its result
+# ---------------------------------------------------------------------------
+
+class CompiledModel:
+    """A Spikformer lowered under an ``ExecutionPlan``: one jit-compiled
+    fixed-shape step per batch bucket over an annotated folded tree.
+
+    ``plan`` is the RESOLVED plan — ``weight_dtype`` concretized and the
+    per-layer ``routes`` filled in — so ``model.plan.to_json()`` is the
+    committable artifact that replays this exact compilation.
+    """
+
+    def __init__(self, *, cfg, backend, folded, plan: ExecutionPlan, fwd):
+        self.cfg = cfg
+        self.backend = backend
+        self.folded = folded
+        self.plan = plan
+        self._fwd = fwd
+        self.buckets = plan.batch_buckets
+
+    # -- shapes -------------------------------------------------------------
+
+    @property
+    def batch_size(self) -> int:
+        """The largest compiled bucket (the planning shape)."""
+        return self.buckets[-1]
+
+    @property
+    def weight_dtype(self) -> str:
+        return self.plan.weight_dtype
+
+    def input_shape(self, bucket: int | None = None):
+        c = self.cfg
+        b = self.batch_size if bucket is None else bucket
+        return (b, c.img_size, c.img_size, c.in_channels)
+
+    def bucket_for(self, n: int) -> int:
+        """Smallest compiled bucket covering ``n`` rows (the largest bucket
+        when nothing covers it — the caller chunks)."""
+        for b in self.buckets:
+            if b >= n:
+                return b
+        return self.buckets[-1]
+
+    def plan_chunks(self, n: int) -> list:
+        """Split ``n`` rows into compiled-bucket steps, minimizing padded
+        rows and then step count: whole largest buckets peel off first, the
+        remainder is solved exactly over the bucket set (3 rows over
+        buckets (2, 8) runs 2+2 with one pad row, not 3 padded to 8 — but
+        7 rows run one 8-bucket, not four 2-buckets, because the pad is the
+        same and one dispatch beats four). Returns [(rows, bucket), ...]."""
+        chunks = []
+        bmax = self.buckets[-1]
+        while n >= bmax:
+            chunks.append((bmax, bmax))
+            n -= bmax
+        if n == 0:
+            return chunks
+        # exact DP on the remainder (< largest bucket): lexicographic
+        # (padded rows, steps) minimum, reconstructed front-first
+        best = {0: (0, 0, None)}            # rows left -> (pad, steps, b)
+        for r in range(1, n + 1):
+            best[r] = min((best[r - min(b, r)][0] + b - min(b, r),
+                           best[r - min(b, r)][1] + 1, b)
+                          for b in self.buckets)
+        while n:
+            b = best[n][2]
+            chunks.append((min(b, n), b))
+            n -= min(b, n)
+        return chunks
+
+    # -- execution ----------------------------------------------------------
+
+    def warmup(self):
+        """Compile (and time) every bucket's fixed-shape step on zeros."""
+        t0 = time.perf_counter()
+        for b in self.buckets:
+            jax.block_until_ready(
+                self._fwd(self.folded, jnp.zeros(self.input_shape(b),
+                                                 jnp.uint8)))
+        return time.perf_counter() - t0
+
+    def step(self, images_u8):
+        """One compiled step: images MUST already be a whole bucket."""
+        if images_u8.shape[0] not in self.buckets:
+            raise ValueError(
+                f"batch of {images_u8.shape[0]} is not a compiled bucket "
+                f"{self.buckets}; pad to one (the engine does this)")
+        return self._fwd(self.folded, jnp.asarray(images_u8, jnp.uint8))
+
+    def logits(self, images_u8):
+        """images_u8: (N, H, W, C) uint8, any N >= 1 -> (N, classes) f32.
+
+        Bucketed dispatch via ``plan_chunks`` — pad rows are dropped
+        before returning.
+        """
+        images_u8 = jnp.asarray(images_u8, jnp.uint8)
+        outs, i = [], 0
+        for rows, b in self.plan_chunks(images_u8.shape[0]):
+            chunk = images_u8[i:i + rows]
+            if b > rows:
+                chunk = jnp.concatenate(
+                    [chunk, jnp.zeros((b - rows, *chunk.shape[1:]),
+                                      jnp.uint8)], axis=0)
+            outs.append(self.step(chunk)[:rows])
+            i += rows
+        return jnp.concatenate(outs, axis=0)
+
+    def classify(self, images_u8):
+        """(N, H, W, C) uint8 -> (N,) int32 argmax class ids."""
+        return jnp.argmax(self.logits(images_u8), axis=-1).astype(jnp.int32)
+
+    def __call__(self, images_u8):
+        return self.logits(images_u8)
+
+
+def compile(params, cfg: SpikformerConfig, plan: ExecutionPlan | None = None,
+            *, folded: bool = False, jit: bool = True,
+            **plan_overrides) -> CompiledModel:
+    """Run the pass pipeline under ``plan`` and return a ``CompiledModel``.
+
+    ``params`` is a training tree (BN folded here) unless ``folded=True``,
+    in which case it is already a ``fold_inference_params`` tree (possibly
+    pre-quantized, possibly pre-annotated). ``plan_overrides`` are
+    convenience ``dataclasses.replace`` fields on the plan::
+
+        compile(params, cfg)                                # all defaults
+        compile(params, cfg, backend="reference")
+        compile(params, cfg, ExecutionPlan.from_json(text)) # replay
+
+    ``jit=False`` lowers to the uncompiled step (debugging, error paths
+    that must raise eagerly).
+    """
+    plan = ExecutionPlan() if plan is None else plan
+    if plan_overrides:
+        plan = dataclasses.replace(plan, **plan_overrides)
+
+    backend = registry.get_backend(plan.backend, **plan.backend_options)
+    spec = (registry.backend_spec(plan.backend)
+            if isinstance(plan.backend, str) else None)
+
+    def check_dtype(dtype):
+        if spec is not None and dtype not in spec.weight_dtypes:
+            raise ValueError(
+                f"backend {spec.name!r} does not support weight_dtype "
+                f"{dtype!r} (capabilities: {spec.weight_dtypes})")
+
+    if plan.weight_dtype is not None:
+        check_dtype(plan.weight_dtype)    # fail before paying to quantize
+    tree = fold_bn(params, cfg, folded=folded)
+    tree, weight_dtype = quantize_weights(tree, plan.weight_dtype)
+    check_dtype(weight_dtype)             # dtype=None resolved from the tree
+
+    if plan.route == "auto":
+        tree, routes = plan_route_tables(
+            tree, cfg, batch_size=plan.plan_batch,
+            max_table_bytes=plan.max_table_bytes,
+            build_tables=registry.wants_lut_tables(plan.backend, backend),
+            constants=plan.route_constants, routes=plan.routes)
+    else:
+        # the pin must hold even for a pre-annotated folded tree: stale
+        # "lut" leaves would silently keep the LUT route alive
+        tree = strip_lut_annotations(tree)
+        routes = {}
+
+    resolved = dataclasses.replace(plan, weight_dtype=weight_dtype,
+                                   routes=routes)
+    return CompiledModel(cfg=cfg, backend=backend, folded=tree,
+                         plan=resolved, fwd=lower(tree, cfg, backend,
+                                                  jit=jit))

@@ -1,205 +1,142 @@
-"""InferenceSession: static-shape batched Spikformer inference.
+"""InferenceSession: deprecation shim over the compile/serve split.
 
-Wraps the BN-folded forward (``core.spikformer.forward_folded``) behind one
-jit-compiled entry point with a FIXED batch shape — the serving contract that
-keeps the step compiled regardless of how many images each request carries.
-Arbitrary request sizes are padded to the next ``batch_size`` multiple and
-run in chunks; pad rows are dropped before returning.
+The session API grew bottom-up — ``__init__`` interleaved BN folding,
+quantization, route planning, and jitting. That pipeline now lives in
+``repro.infer.compile`` as named passes under an ``ExecutionPlan``, and
+the serving loop in ``repro.infer.engine``. This class survives so
+existing callers keep working:
 
-    cfg = SpikformerConfig().scaled()
-    params = spikformer.init(jax.random.PRNGKey(0), cfg)
     sess = InferenceSession(params, cfg, backend="packed", batch_size=8)
-    logits = sess.logits(images_u8)          # (N, classes), any N
-    labels = sess.classify(images_u8)        # (N,) argmax
+    # ==  (modulo a DeprecationWarning)
+    model = compile(params, cfg, ExecutionPlan(backend="packed",
+                                               batch_buckets=(8,)))
 
-The default "packed" backend carries every inter-layer activation as uint8
-bit planes (1 bit/spike in storage); "reference" runs the float
-``core.unified`` graph — on CPU the two produce bit-identical logits.
+Every attribute of the old surface (``folded``, ``plan``, ``backend``,
+``weight_dtype``, ``logits``/``classify``/``warmup``, the private
+``_fwd``) delegates to the underlying ``CompiledModel``. New code should
+call ``compile()`` directly — it gets multi-bucket steps and a
+serializable plan; the shim is single-bucket by construction.
+
+``plan_routes`` / ``strip_lut_annotations`` re-export the compile passes
+under their historical names; ``benchmark_session`` times either a session
+or a ``CompiledModel``.
 """
 from __future__ import annotations
 
 import time
+import warnings
 
 import jax
 import jax.numpy as jnp
 
-from ..core import spikformer
-from ..core.spikformer import SpikformerConfig, fold_inference_params
-from ..kernels import lut_matmul
-from ..kernels.ops import choose_route
-from .backends import get_backend
-from .quant import WEIGHT_DTYPES, map_folded_layers, quantize_folded
+from .compile import (CompiledModel, ExecutionPlan, compile as _compile,
+                      plan_route_tables, strip_lut_annotations)  # noqa: F401
+from ..core.spikformer import SpikformerConfig
 
 
 def plan_routes(folded, cfg: SpikformerConfig, *, batch_size: int,
-                max_table_bytes: int = lut_matmul.MAX_TABLE_BYTES,
-                build_tables: bool = True):
-    """Per-layer matmul route planning: the byte-LUT's precompute lives here.
-
-    For every folded layer this computes the packed-route matmul shape
-    (M, K, N, G) the compiled step will see, asks ``kernels.ops.choose_route``
-    whether the unpack-free byte-LUT datapath wins there, and — where it does
-    — builds the (C, 256, N) chunk-partial-sum table ONCE and caches it in
-    the returned tree as a ``lut`` leaf (so the per-batch work is pure
-    gather-and-accumulate). Layers routed "unpack" are left untouched.
-
-    Both backends consume a tree annotated by the same deterministic plan:
-    the packed backend executes the gather route, the float reference
-    backend the fold-order emulation — the planning decision, like the int8
-    threshold fold, is part of the math both sides agree on. The reference
-    side never gathers, so ``build_tables=False`` (what ``InferenceSession``
-    uses for backends with ``wants_lut_tables = False``) annotates LUT
-    layers with a cheap boolean flag instead of the (C, 256, N) tables.
-    Returns ``(annotated_tree, plan)`` with ``plan`` mapping layer paths to
-    routes.
-    """
-    t = cfg.timesteps
-    g = -(-t // 8)
-    m_tok = batch_size * cfg.tokens
-    plan = {}
-
-    def shapes_for(path):
-        """Packed-route matmul shape (m, live planes, groups) at ``path``."""
-        if path.startswith("scs/conv"):
-            i = int(path.removeprefix("scs/conv"))
-            m = batch_size * (cfg.img_size // 2 ** (i + 1)) ** 2
-            # conv0 is SSSC: always 8 value planes, one group
-            return (m, 8, 1) if i == 0 else (m, t, g)
-        return m_tok, t, g
-
-    def annotate(path, layer):
-        wq = layer["kernel"]
-        m, tt, gg = shapes_for(path)
-        k, n = wq.shape
-        route = choose_route(m=m, k=k, n=n, g=gg, t=tt,
-                             weights_are_int=jnp.issubdtype(
-                                 wq.dtype, jnp.integer),
-                             max_table_bytes=max_table_bytes)
-        plan[path] = route
-        # drop any stale annotation first — re-planning an annotated tree
-        # must not leave a previous plan's "lut" leaf on an unpack layer
-        layer = {k2: v for k2, v in layer.items() if k2 != "lut"}
-        if route == "lut":
-            layer["lut"] = lut_matmul.build_lut(wq) if build_tables else True
-        return layer
-
-    return map_folded_layers(folded, annotate), plan
-
-
-def strip_lut_annotations(folded):
-    """Remove every ``lut`` leaf from a folded tree (shallow copies only) —
-    what ``route="unpack"`` uses to pin the mirrored-dot oracle route even
-    on a tree a previous planner annotated."""
-    return map_folded_layers(
-        folded, lambda _, l: {k: v for k, v in l.items() if k != "lut"})
+                max_table_bytes=None, build_tables: bool = True):
+    """Historical name of the route-planning pass; see
+    ``compile.plan_route_tables`` (which also takes autotuned constants
+    and pinned routes)."""
+    kw = {} if max_table_bytes is None else \
+        {"max_table_bytes": max_table_bytes}
+    return plan_route_tables(folded, cfg, batch_size=batch_size,
+                             build_tables=build_tables, **kw)
 
 
 class InferenceSession:
-    """Compiled, fixed-shape Spikformer classifier over a chosen backend."""
+    """Deprecated: compiled fixed-shape Spikformer classifier — now a thin
+    shim over ``compile()`` with a single batch bucket."""
 
     def __init__(self, params, cfg: SpikformerConfig, *, backend="packed",
                  batch_size: int = 8, folded: bool = False,
                  weight_dtype: str | None = None,
                  pallas: bool | None = None, jit: bool = True,
                  route: str = "auto"):
-        """``params`` is a training param tree (BN folded here) unless
-        ``folded=True``, in which case it is already a fold_inference_params
-        tree (possibly pre-quantized). ``batch_size`` is the static compile
-        shape.
+        """Arguments keep their pre-split meanings: ``batch_size`` is the
+        static compile shape (one bucket), ``weight_dtype`` as in
+        ``compile.quantize_weights``, ``route="unpack"`` pins the
+        mirrored-dot oracle route (``plan == {}``). Parity pairs must be
+        built with the same ``route`` — the plan is part of the math."""
+        warnings.warn(
+            "InferenceSession is deprecated; use repro.infer.compile() "
+            "with an ExecutionPlan (and repro.infer.engine for serving)",
+            DeprecationWarning, stacklevel=2)
+        options = {} if pallas is None else {"pallas": pallas}
+        plan = ExecutionPlan(backend=backend, weight_dtype=weight_dtype,
+                             batch_buckets=(int(batch_size),), route=route,
+                             backend_options=options)
+        self._compiled = _compile(params, cfg, plan, folded=folded, jit=jit)
 
-        ``weight_dtype="int8"`` quantizes the folded kernels per-out-channel
-        to int8 (``infer.quant``); the dequantization scale is folded into
-        each layer's LIF threshold, so the packed matmuls stay integer.
-        "float32" keeps the BN-folded floats (the exactness reference for
-        the float route; with int8, the "reference" backend is the bit-exact
-        float *emulation* of the same quantized math). The default ``None``
-        means "whatever the tree carries": float32 for a fresh fold, int8
-        for a pre-quantized tree.
+    # -- the old surface, delegated -----------------------------------------
 
-        ``route="auto"`` runs the per-layer planner (``plan_routes``): layers
-        where the unpack-free byte-LUT datapath wins get a cached table;
-        ``route="unpack"`` pins every layer to the mirrored-dot oracle
-        route. Parity pairs must be built with the same ``route`` argument —
-        the plan is part of the math."""
-        if weight_dtype is not None and weight_dtype not in WEIGHT_DTYPES:
-            raise ValueError(f"unknown weight_dtype {weight_dtype!r}; "
-                             f"expected one of {WEIGHT_DTYPES}")
-        if route not in ("auto", "unpack"):
-            raise ValueError(f"unknown route {route!r}; "
-                             "expected 'auto' or 'unpack'")
-        self.cfg = cfg
-        self.batch_size = int(batch_size)
-        self.backend = get_backend(backend, pallas=pallas)
-        self.folded = params if folded else fold_inference_params(params, cfg)
-        already_quantized = "scale" in self.folded["scs"]["conv0"]
-        if weight_dtype == "float32" and already_quantized:
-            raise ValueError(
-                "weight_dtype='float32' requested but the folded tree is "
-                "already int8-quantized; pass the float tree or drop the "
-                "weight_dtype argument")
-        if weight_dtype == "int8" and not already_quantized:
-            self.folded = quantize_folded(self.folded)
-        self.weight_dtype = ("int8" if weight_dtype == "int8"
-                             or already_quantized else "float32")
-        if route == "auto":
-            self.folded, self.plan = plan_routes(
-                self.folded, cfg, batch_size=self.batch_size,
-                build_tables=getattr(self.backend, "wants_lut_tables", True))
-        else:
-            # the pin must hold even for a pre-annotated folded tree: stale
-            # "lut" leaves would silently keep the LUT route alive
-            self.folded = strip_lut_annotations(self.folded)
-            self.plan = {}
+    @property
+    def compiled(self) -> CompiledModel:
+        """The underlying ``CompiledModel`` (the migration escape hatch)."""
+        return self._compiled
 
-        def fwd(folded_tree, images):
-            return spikformer.forward_folded(folded_tree, images, cfg,
-                                             backend=self.backend)
+    @property
+    def cfg(self):
+        return self._compiled.cfg
 
-        self._fwd = jax.jit(fwd) if jit else fwd
+    @property
+    def backend(self):
+        return self._compiled.backend
+
+    @property
+    def folded(self):
+        return self._compiled.folded
+
+    @property
+    def plan(self) -> dict:
+        """The per-layer route dict (the resolved ``ExecutionPlan.routes``)."""
+        return self._compiled.plan.routes
+
+    @property
+    def weight_dtype(self) -> str:
+        return self._compiled.weight_dtype
+
+    @property
+    def batch_size(self) -> int:
+        return self._compiled.batch_size
+
+    @property
+    def _fwd(self):
+        return self._compiled._fwd
 
     @property
     def input_shape(self):
-        c = self.cfg
-        return (self.batch_size, c.img_size, c.img_size, c.in_channels)
+        return self._compiled.input_shape()
 
     def warmup(self):
         """Compile (and time) the fixed-shape step on zero images."""
-        t0 = time.perf_counter()
-        jax.block_until_ready(
-            self._fwd(self.folded, jnp.zeros(self.input_shape, jnp.uint8)))
-        return time.perf_counter() - t0
+        return self._compiled.warmup()
 
     def logits(self, images_u8):
         """images_u8: (N, H, W, C) uint8, any N >= 1 -> (N, classes) f32."""
-        images_u8 = jnp.asarray(images_u8, jnp.uint8)
-        n = images_u8.shape[0]
-        bs = self.batch_size
-        pad = (-n) % bs
-        if pad:
-            images_u8 = jnp.concatenate(
-                [images_u8, jnp.zeros((pad, *images_u8.shape[1:]),
-                                      jnp.uint8)], axis=0)
-        outs = [self._fwd(self.folded, images_u8[i:i + bs])
-                for i in range(0, n + pad, bs)]
-        return jnp.concatenate(outs, axis=0)[:n]
+        return self._compiled.logits(images_u8)
 
     def classify(self, images_u8):
         """(N, H, W, C) uint8 -> (N,) int32 argmax class ids."""
-        return jnp.argmax(self.logits(images_u8), axis=-1).astype(jnp.int32)
+        return self._compiled.classify(images_u8)
 
     def __call__(self, images_u8):
         return self.logits(images_u8)
 
 
-def benchmark_session(sess: InferenceSession, *, batches: int = 4,
-                      seed: int = 0, repeats: int = 3):
+def benchmark_session(sess, *, batches: int = 4, seed: int = 0,
+                      repeats: int = 3):
     """Throughput probe: images/sec over ``batches`` full compiled batches
-    of random uint8 images (excludes compile via warmup). The window is
-    repeated ``repeats`` times and the best wall-time wins — the standard
-    throughput convention, and the only way to get a stable number on a
-    noisy shared machine. Returns a dict."""
+    of random uint8 images (excludes compile via warmup). Accepts an
+    ``InferenceSession`` or a ``CompiledModel`` (largest bucket is timed).
+    The window is repeated ``repeats`` times and the best wall-time wins —
+    the standard throughput convention, and the only way to get a stable
+    number on a noisy shared machine. Returns a dict."""
     compile_s = sess.warmup()
-    imgs = jax.random.randint(jax.random.PRNGKey(seed), sess.input_shape,
+    shape = sess.input_shape() if callable(getattr(sess, "input_shape")) \
+        else sess.input_shape
+    imgs = jax.random.randint(jax.random.PRNGKey(seed), shape,
                               0, 256, jnp.uint8)
     wall = float("inf")
     for _ in range(max(1, repeats)):

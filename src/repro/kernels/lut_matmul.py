@@ -33,6 +33,8 @@ chunk accumulation in int32).
 """
 from __future__ import annotations
 
+import dataclasses
+
 import jax.numpy as jnp
 from jax import lax
 
@@ -210,19 +212,48 @@ def shift_sum_fold(per_plane):
 # Dispatch heuristic
 # ---------------------------------------------------------------------------
 
-# Cost-model constants, fit on the CPU microbenchmarks that motivated this
-# route (see docs/architecture.md): a gathered table row costs ~4x a dot
-# FMA per element but covers 8 weight rows; the bit transpose replaces the
-# 4-bytes-per-bit unpack with ~2.5 byte-ops per packed byte.
-_GATHER_COST = 4.0     # per gathered table element, relative to one dot FMA
-_TRANSPOSE_COST = 2.5  # per packed input byte
-_UNPACK_COST = 8.0     # per unpacked plane element (u8 -> f32 write)
 MAX_TABLE_BYTES = 1 << 24  # 16 MiB per-layer table cap (memory trade-off)
+
+
+@dataclasses.dataclass(frozen=True)
+class RouteConstants:
+    """Cost-model constants for ``choose_route``, in units of one dot FMA.
+
+    The defaults were fit on the CPU microbenchmarks that motivated the LUT
+    route (see docs/architecture.md): a gathered table row costs ~4x a dot
+    FMA per element but covers 8 weight rows; the bit transpose replaces the
+    4-bytes-per-bit unpack with ~2.5 byte-ops per packed byte. They are a
+    property of the *host*, not the model — ``scripts/autotune_routes.py``
+    refits them from timings and an ``ExecutionPlan`` carries them as data,
+    so a committed plan pins the dispatch decisions it was tuned for.
+    """
+    gather_cost: float = 4.0     # per gathered table element
+    transpose_cost: float = 2.5  # per packed input byte
+    unpack_cost: float = 8.0     # per unpacked plane element (u8->f32 write)
+    int_gather_discount: float = 0.5   # int16 tables halve gather bandwidth
+    cache_bytes: int = 1 << 21   # table size where gathers stop hitting L2
+    cache_penalty: float = 3.0   # gather-cost multiplier past cache_bytes
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "RouteConstants":
+        known = {f.name for f in dataclasses.fields(cls)}
+        bad = set(d) - known
+        if bad:
+            raise ValueError(f"unknown route-constant keys {sorted(bad)}; "
+                             f"expected a subset of {sorted(known)}")
+        return cls(**d)
+
+
+DEFAULT_ROUTE_CONSTANTS = RouteConstants()
 
 
 def choose_route(*, m: int, k: int, n: int, g: int, t: int,
                  weights_are_int: bool = False,
-                 max_table_bytes: int = MAX_TABLE_BYTES) -> str:
+                 max_table_bytes: int = MAX_TABLE_BYTES,
+                 constants: RouteConstants | None = None) -> str:
     """Pick "lut" or "unpack" for a packed matmul of (t live planes, M rows,
     K inputs, N outputs, G plane groups) on the CPU route.
 
@@ -231,15 +262,19 @@ def choose_route(*, m: int, k: int, n: int, g: int, t: int,
     deletes; it loses when the table outgrows cache — int16 tables halve
     that pressure — or the per-layer table cap. The fallback is always the
     unpack route, which stays the bit-exact mirror of the float reference.
+    ``constants`` overrides the host cost model (autotuned plans pass the
+    fitted values; ``None`` keeps the committed defaults).
     """
+    cc = DEFAULT_ROUTE_CONSTANTS if constants is None else constants
     c = num_k_chunks(k)
     tbl = table_bytes(k, n, weights_are_int)
     if tbl > max_table_bytes:
         return "unpack"
-    gather_scale = _GATHER_COST * (0.5 if weights_are_int else 1.0)
+    gather_scale = cc.gather_cost * (cc.int_gather_discount
+                                     if weights_are_int else 1.0)
     # cache pressure: once the table spills L2, gathered rows stop hitting
-    cache_penalty = 1.0 if tbl <= (1 << 21) else 3.0
+    cache_penalty = 1.0 if tbl <= cc.cache_bytes else cc.cache_penalty
     lut_cost = (t * m * c * n * gather_scale * cache_penalty
-                + g * m * k * _TRANSPOSE_COST)
-    unpack_cost = t * m * k * (n + _UNPACK_COST)
+                + g * m * k * cc.transpose_cost)
+    unpack_cost = t * m * k * (n + cc.unpack_cost)
     return "lut" if lut_cost < unpack_cost else "unpack"

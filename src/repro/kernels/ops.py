@@ -19,7 +19,8 @@ import jax.numpy as jnp
 
 from . import ref
 from . import lut_matmul as lut
-from .lut_matmul import choose_route  # noqa: F401  (re-export: the dispatch heuristic)
+from .lut_matmul import (  # noqa: F401  (re-export: the dispatch heuristic)
+    RouteConstants, choose_route)
 from .spike_matmul import spike_matmul as _spike_matmul_pallas
 from .tflif import tflif_fused as _tflif_pallas
 from .stdp_attention import stdp_attention as _stdp_pallas
@@ -27,19 +28,22 @@ from .flash_attention import flash_attention as _flash_pallas
 from ..core.spike import bitplanes_u8, num_plane_groups, unpack_timesteps
 
 
-def _resolve_route(route, table, *, m, k, n, g, t, weights_are_int):
+def _resolve_route(route, table, *, m, k, n, g, t, weights_are_int,
+                   constants=None):
     """Route resolution for the packed CPU matmuls.
 
     ``None`` is the *safe* default: LUT only when the caller (the session
     planner) supplies a prebuilt table — so un-planned callers keep the
     single-dot unpack route that mirrors the float reference bit for bit.
-    "auto" applies ``choose_route`` inline; "lut"/"unpack" force.
+    "auto" applies ``choose_route`` inline (``constants`` overrides the
+    cost model — plans carry autotuned values); "lut"/"unpack" force.
     """
     if route is None:
         return "lut" if table is not None else "unpack"
     if route == "auto":
         return choose_route(m=m, k=k, n=n, g=g, t=t,
-                            weights_are_int=weights_are_int)
+                            weights_are_int=weights_are_int,
+                            constants=constants)
     if route not in ("lut", "unpack"):
         raise ValueError(f"unknown packed-matmul route {route!r}")
     return route
@@ -140,7 +144,7 @@ def flash_attention(q, k, v, *, scale: float, causal: bool = True,
 
 def spike_linear(x_packed, w, bias=None, *, t: int,
                  pallas: bool | None = None, route: str | None = None,
-                 table=None, **blocks):
+                 table=None, route_constants=None, **blocks):
     """Packed WSSL (weight-stationary spiking linear).
 
     Args:
@@ -153,8 +157,10 @@ def spike_linear(x_packed, w, bias=None, *, t: int,
         unpack oracle), "auto" (the ``choose_route`` heuristic), or a forced
         "lut" / "unpack".
       table: prebuilt ``lut_matmul.build_lut(w)`` result, cached by the
-        session planner so the 256-entry chunk sums are paid once per layer,
-        not per batch.
+        compile-time route planner so the 256-entry chunk sums are paid
+        once per layer, not per batch.
+      route_constants: ``RouteConstants`` override for the route="auto"
+        cost model (plans carry autotuned values; None = defaults).
 
     Returns:
       (t, ..., N) f32 per-timestep accumulators. On the CPU unpack route all
@@ -178,7 +184,8 @@ def spike_linear(x_packed, w, bias=None, *, t: int,
                                     interpret=not on_tpu(), **blocks)
         per = per8.reshape(g * 8, m, n)[:t]                # (t, M, N)
     elif _resolve_route(route, table, m=m, k=k, n=n, g=g, t=t,
-                        weights_are_int=lut._is_int_kernel(w)) == "lut":
+                        weights_are_int=lut._is_int_kernel(w),
+                        constants=route_constants) == "lut":
         tbl = lut.build_lut(w) if table is None else table
         idx = lut.plane_indices(x_packed)[:t]              # (t, ..., C)
         per = lut.lut_matmul(idx, tbl)                     # (t, ..., N)
@@ -196,7 +203,8 @@ def spike_linear(x_packed, w, bias=None, *, t: int,
 
 
 def sssc_linear(x_u8, w, bias=None, *, pallas: bool | None = None,
-                route: str | None = None, table=None, **blocks):
+                route: str | None = None, table=None, route_constants=None,
+                **blocks):
     """Packed SSSC (shift-and-sum spiking conv, as a linear over 8 bit-planes).
 
     Args:
@@ -222,7 +230,8 @@ def sssc_linear(x_u8, w, bias=None, *, pallas: bool | None = None,
         y = _spike_matmul_pallas(x2, w, mode="shift_sum",
                                  interpret=not on_tpu(), **blocks)
     elif _resolve_route(route, table, m=m, k=k, n=n, g=1, t=8,
-                        weights_are_int=lut._is_int_kernel(w)) == "lut":
+                        weights_are_int=lut._is_int_kernel(w),
+                        constants=route_constants) == "lut":
         tbl = lut.build_lut(w) if table is None else table
         idx = lut.plane_indices(x_u8[None])                # (8, ..., C)
         y = lut.shift_sum_fold(lut.lut_matmul(idx, tbl))   # (..., N)

@@ -1,82 +1,51 @@
-"""Spikformer image-classification serving driver over the packed datapath.
-
-Mirrors the continuous-batching shape of ``launch.serve``: requests (each
-carrying one or more images) queue up, the engine drains them through ONE
-jit-compiled fixed-batch ``InferenceSession`` step — images from different
-requests share a batch (micro-batching), partial batches are padded, so the
-step never recompiles. This is the paper's real-time classification serving
-loop: VESTA sustains ~30 fps on Spikformer V2; the engine reports achieved
-fps against that target.
+"""Spikformer image-classification serving driver — a thin CLI over the
+compile/serve split: ``repro.infer.compile`` builds the multi-bucket
+``CompiledModel``, ``repro.infer.engine.MicroBatchEngine`` drains the
+request queue through it. This is the paper's real-time classification
+serving loop: VESTA sustains ~30 fps on Spikformer V2; the engine reports
+achieved fps against that target, plus p50/p95 latency and pad waste (the
+padded-rows fraction multi-bucket dispatch exists to cut).
 
   PYTHONPATH=src python -m repro.launch.serve_spikformer --reduce \
-      --requests 12 --batch-size 8 --backend packed
+      --requests 12 --buckets 2,8 --backend packed
+
+  PYTHONPATH=src python -m repro.launch.serve_spikformer --reduce --smoke
+      # CI gate: a handful of requests, asserts all complete with correct
+      # shapes and labels in range
 """
 from __future__ import annotations
 
 import argparse
 import dataclasses
 import json
-import time
-from collections import deque
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from ..core.spikformer import SpikformerConfig, init as spik_init
-from ..infer import InferenceSession
+from ..infer import ExecutionPlan, MicroBatchEngine, PAPER_FPS, compile
+from ..infer.engine import Request
 
-PAPER_FPS = 30.0   # VESTA's reported real-time Spikformer V2 rate
-
-
-@dataclasses.dataclass
-class ImageRequest:
-    rid: int
-    images: np.ndarray              # (n, H, W, C) uint8
-    labels: list = dataclasses.field(default_factory=list)
-    t_arrival: float = 0.0
-    t_done: float = 0.0
+# Pre-split names, kept importable: ImageRequest is the engine Request;
+# SpikformerEngine is a construct-from-params convenience over the split.
+ImageRequest = Request
 
 
-class SpikformerEngine:
-    """Micro-batching classifier over a static-shape InferenceSession."""
+class SpikformerEngine(MicroBatchEngine):
+    """Micro-batching classifier built straight from training params —
+    the pre-split constructor shape, now compile() + MicroBatchEngine."""
 
     def __init__(self, params, cfg: SpikformerConfig, *, batch_size: int = 8,
-                 backend: str = "packed"):
-        self.session = InferenceSession(params, cfg, backend=backend,
-                                        batch_size=batch_size)
-        self.batch_size = batch_size
-        self.queue: deque[tuple[ImageRequest, int]] = deque()  # (req, img idx)
-        self.done: list[ImageRequest] = []
-        self._pending: dict[int, int] = {}                     # rid -> left
+                 buckets=None, backend: str = "packed",
+                 weight_dtype: str | None = None):
+        plan = ExecutionPlan(backend=backend, weight_dtype=weight_dtype,
+                             batch_buckets=buckets or (batch_size,))
+        super().__init__(compile(params, cfg, plan))
 
-    def submit(self, req: ImageRequest):
-        req.t_arrival = time.time()
-        self._pending[req.rid] = len(req.images)
-        req.labels = [None] * len(req.images)
-        for i in range(len(req.images)):
-            self.queue.append((req, i))
-
-    def step(self) -> int:
-        """Classify one fused batch drawn across requests; returns #images."""
-        if not self.queue:
-            return 0
-        work = [self.queue.popleft()
-                for _ in range(min(self.batch_size, len(self.queue)))]
-        batch = np.stack([req.images[i] for req, i in work])
-        labels = self.session.classify(batch)
-        for (req, i), lab in zip(work, np.asarray(labels)):
-            req.labels[i] = int(lab)
-            self._pending[req.rid] -= 1
-            if self._pending[req.rid] == 0:
-                req.t_done = time.time()
-                self.done.append(req)
-        return len(work)
-
-    def run(self):
-        while self.queue:
-            self.step()
-        return self.done
+    @property
+    def session(self):
+        """The compiled model (named for the pre-split attribute)."""
+        return self.model
 
 
 def main(argv=None):
@@ -85,19 +54,46 @@ def main(argv=None):
                     help="reduced CPU config (32x32, dim 64, depth 2)")
     ap.add_argument("--requests", type=int, default=12)
     ap.add_argument("--images-per-request", type=int, default=3)
-    ap.add_argument("--batch-size", type=int, default=8)
-    ap.add_argument("--backend", default="packed",
-                    choices=["packed", "reference"])
+    ap.add_argument("--buckets", default=None,
+                    help="comma-separated static batch buckets (default "
+                         "2,8); the engine picks the cheapest per step")
+    ap.add_argument("--backend", default=None,
+                    choices=["packed", "reference"],
+                    help="default packed")
+    ap.add_argument("--weight-dtype", default=None,
+                    choices=["float32", "int8"])
+    ap.add_argument("--plan", default=None,
+                    help="load a committed ExecutionPlan JSON (backend/"
+                         "buckets flags still override)")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI smoke: few requests, assert completion/shapes")
     args = ap.parse_args(argv)
+
+    if args.smoke:
+        args.requests = min(args.requests, 5)
+        args.images_per_request = min(args.images_per_request, 2)
 
     cfg = SpikformerConfig()
     if args.reduce:
         cfg = cfg.scaled()
     params = spik_init(jax.random.PRNGKey(args.seed), cfg)
-    eng = SpikformerEngine(params, cfg, batch_size=args.batch_size,
-                           backend=args.backend)
-    compile_s = eng.session.warmup()
+
+    # a committed --plan replays as-is; explicit flags (only) override it
+    plan = (ExecutionPlan.from_json(open(args.plan).read()) if args.plan
+            else ExecutionPlan(batch_buckets=(2, 8)))
+    over = {}
+    if args.backend is not None:
+        over["backend"] = args.backend
+    if args.buckets is not None:
+        over["batch_buckets"] = tuple(int(b) for b in args.buckets.split(","))
+    if args.weight_dtype is not None:
+        over["weight_dtype"] = args.weight_dtype
+    if over:
+        plan = dataclasses.replace(plan, **over)
+    model = compile(params, cfg, plan)
+    compile_s = model.warmup()
+    eng = MicroBatchEngine(model)
 
     rng = np.random.default_rng(args.seed + 1)
     for i in range(args.requests):
@@ -106,25 +102,26 @@ def main(argv=None):
                             dtype=np.uint8)
         eng.submit(ImageRequest(rid=i, images=imgs))
 
-    t0 = time.time()
     done = eng.run()
-    wall = time.time() - t0
-
-    n_images = sum(len(r.images) for r in done)
-    lat = [r.t_done - r.t_arrival for r in done]
-    fps = n_images / wall
+    stats = eng.stats()
     summary = {
-        "backend": args.backend,
-        "requests": len(done),
-        "images": n_images,
+        "backend": model.backend.name,
+        "weight_dtype": model.weight_dtype,
         "compile_s": round(compile_s, 3),
-        "wall_s": round(wall, 3),
-        "fps": round(fps, 2),
-        "paper_fps": PAPER_FPS,
-        "realtime": fps >= PAPER_FPS,
-        "mean_latency_s": round(sum(lat) / len(lat), 4),
+        **stats,
     }
     print(json.dumps(summary))
+
+    if args.smoke:
+        # the CI contract: every request completed, every label well-formed
+        assert len(done) == args.requests, (len(done), args.requests)
+        for req in done:
+            assert len(req.labels) == len(req.images)
+            assert all(isinstance(lab, int)
+                       and 0 <= lab < cfg.num_classes for lab in req.labels)
+        assert stats["images"] == args.requests * args.images_per_request
+        print(json.dumps({"smoke": "ok", "requests": len(done),
+                          "pad_waste": stats["pad_waste"]}))
     return summary
 
 

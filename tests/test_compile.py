@@ -1,0 +1,361 @@
+"""The compile/serve split: backend registry, ExecutionPlan JSON
+round-trip, the pass pipeline, multi-bucket engine parity, and the
+InferenceSession deprecation shim.
+
+The exactness standard is inherited from tests/test_infer.py: packed and
+reference logits are bit-identical on CPU — including when requests reach
+the compiled model through different batch buckets, and when the route
+plan was deserialized from JSON or built from autotuned constants."""
+import dataclasses
+import json
+import sys
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.spikformer import SpikformerConfig, init, fold_inference_params
+from repro.infer import (CompiledModel, ExecutionPlan, InferenceSession,
+                         MicroBatchEngine, Request, backend_spec,
+                         compile as infer_compile, list_backends,
+                         quantize_weights, register_backend,
+                         unregister_backend)
+from repro.infer.compile import fold_bn, plan_route_tables
+from repro.kernels.lut_matmul import RouteConstants
+from repro.kernels import ops
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent
+                       / "scripts"))
+
+
+def exact(a, b):
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@pytest.fixture(scope="module")
+def small():
+    cfg = SpikformerConfig().scaled()
+    params = init(jax.random.PRNGKey(0), cfg)
+    img = jax.random.randint(jax.random.PRNGKey(1), (5, 32, 32, 3), 0, 256,
+                             jnp.uint8)
+    return cfg, params, img
+
+
+# ---------------------------------------------------------------------------
+# backend registry
+# ---------------------------------------------------------------------------
+
+def test_builtin_backends_registered():
+    assert set(list_backends()) >= {"packed", "reference"}
+    spec = backend_spec("reference")
+    assert spec.wants_lut_tables is False
+    assert backend_spec("float").name == "reference"   # alias resolves
+
+
+def test_register_backend_and_capability_filtering():
+    register_backend("test_f32only", lambda **kw: object(),
+                     weight_dtypes=("float32",), device_kinds=("tpu",))
+    try:
+        assert "test_f32only" in list_backends()
+        assert "test_f32only" in list_backends(weight_dtype="float32")
+        assert "test_f32only" not in list_backends(weight_dtype="int8")
+        assert "test_f32only" not in list_backends(device_kind="cpu")
+        assert "test_f32only" in list_backends(device_kind="tpu")
+    finally:
+        unregister_backend("test_f32only")
+    assert "test_f32only" not in list_backends()
+
+
+def test_register_backend_refuses_silent_shadowing():
+    with pytest.raises(ValueError, match="already registered"):
+        register_backend("packed", lambda **kw: object())
+
+
+def test_register_backend_overwrite_takes_over_alias():
+    """Overwriting an alias must actually reroute it (and detach it from
+    its old owner without removing the owner)."""
+    sentinel = object()
+    register_backend("float", lambda **kw: sentinel, overwrite=True)
+    try:
+        from repro.infer import get_backend
+        assert get_backend("float") is sentinel
+        assert backend_spec("reference").aliases == ()   # owner survives
+    finally:
+        unregister_backend("float")
+        register_backend("reference",
+                         backend_spec("reference").factory,
+                         weight_dtypes=("float32", "int8"),
+                         wants_lut_tables=False, aliases=("float",),
+                         overwrite=True)
+    assert backend_spec("float").name == "reference"     # restored
+
+
+def test_unknown_backend_name_errors(small):
+    cfg, params, _ = small
+    with pytest.raises(ValueError, match="unknown inference backend"):
+        infer_compile(params, cfg, ExecutionPlan(backend="no_such"))
+
+
+def test_compile_rejects_unsupported_weight_dtype(small):
+    cfg, params, _ = small
+    register_backend("test_nof32", lambda **kw: object(),
+                     weight_dtypes=("int8",))
+    try:
+        with pytest.raises(ValueError, match="does not support weight_dtype"):
+            infer_compile(params, cfg,
+                          ExecutionPlan(backend="test_nof32",
+                                        weight_dtype="float32"))
+    finally:
+        unregister_backend("test_nof32")
+
+
+# ---------------------------------------------------------------------------
+# ExecutionPlan: validation + JSON round-trip
+# ---------------------------------------------------------------------------
+
+def test_plan_validates_fields():
+    with pytest.raises(ValueError, match="route"):
+        ExecutionPlan(route="fused")
+    with pytest.raises(ValueError, match="weight_dtype"):
+        ExecutionPlan(weight_dtype="int4")
+    with pytest.raises(ValueError, match="batch_buckets"):
+        ExecutionPlan(batch_buckets=())
+    # buckets are sorted + deduped; plan_batch is the largest
+    p = ExecutionPlan(batch_buckets=(8, 2, 8))
+    assert p.batch_buckets == (2, 8) and p.plan_batch == 8
+
+
+def test_plan_json_roundtrip_identity():
+    p = ExecutionPlan(backend="packed", weight_dtype="int8",
+                      batch_buckets=(2, 8), max_table_bytes=1 << 20,
+                      route_constants=RouteConstants(gather_cost=3.25),
+                      routes={"scs/conv0": "lut", "blocks/b0/mlp/fc1":
+                              "unpack"})
+    q = ExecutionPlan.from_json(p.to_json())
+    assert q == p
+
+
+def test_plan_json_fragment_fills_defaults():
+    q = ExecutionPlan.from_json(json.dumps(
+        {"route_constants": {"gather_cost": 2.0}}))
+    assert q.route_constants.gather_cost == 2.0
+    assert q.route_constants.transpose_cost == \
+        RouteConstants().transpose_cost
+    assert q.backend == "packed" and q.batch_buckets == (8,)
+
+
+def test_plan_json_rejects_unknown_keys():
+    with pytest.raises(ValueError, match="unknown ExecutionPlan keys"):
+        ExecutionPlan.from_json('{"batch_size": 8}')
+    with pytest.raises(ValueError, match="route-constant keys"):
+        ExecutionPlan.from_json('{"route_constants": {"gatherr": 1.0}}')
+
+
+def test_compiled_plan_roundtrip_reproduces_route_plan(small):
+    """The acceptance property: serialize the resolved plan, recompile from
+    JSON, get the identical per-layer route plan AND identical logits."""
+    cfg, params, img = small
+    m1 = infer_compile(params, cfg, ExecutionPlan(batch_buckets=(2, 8)))
+    assert m1.plan.routes                      # resolved, non-empty
+    m2 = infer_compile(params, cfg, ExecutionPlan.from_json(m1.plan.to_json()))
+    assert m2.plan.routes == m1.plan.routes
+    exact(m1.logits(img), m2.logits(img))
+
+
+def test_pinned_routes_reject_foreign_config(small):
+    """A deserialized plan for a different architecture must fail loudly,
+    not plan a fresh heuristic."""
+    cfg, params, _ = small
+    m1 = infer_compile(params, cfg)
+    deep = dataclasses.replace(cfg, depth=3)
+    params3 = init(jax.random.PRNGKey(0), deep)
+    with pytest.raises(ValueError, match="no entry for layer"):
+        infer_compile(params3, deep,
+                      dataclasses.replace(m1.plan, batch_buckets=(8,)))
+
+
+# ---------------------------------------------------------------------------
+# pass pipeline in isolation
+# ---------------------------------------------------------------------------
+
+def test_quantize_weights_pass(small):
+    cfg, params, _ = small
+    tree = fold_bn(params, cfg)
+    t8, d8 = quantize_weights(tree, "int8")
+    assert d8 == "int8" and "scale" in t8["scs"]["conv0"]
+    # None resolves from the tree
+    _, dN = quantize_weights(t8, None)
+    assert dN == "int8"
+    _, dF = quantize_weights(tree, None)
+    assert dF == "float32"
+    with pytest.raises(ValueError, match="already int8-quantized"):
+        quantize_weights(t8, "float32")
+
+
+def test_plan_route_tables_pinned_replay(small):
+    """plan_route_tables under pinned routes applies them verbatim —
+    including a deliberately non-heuristic choice."""
+    cfg, params, _ = small
+    tree = fold_bn(params, cfg)
+    _, auto = plan_route_tables(tree, cfg, batch_size=8)
+    flipped = {p: ("unpack" if r == "lut" else r) for p, r in auto.items()}
+    t2, replay = plan_route_tables(tree, cfg, batch_size=8, routes=flipped)
+    assert replay == flipped
+    assert all("lut" not in t2["scs"][n] for n in t2["scs"])
+
+
+def test_route_constants_change_decisions():
+    """The constants are real plan inputs: an absurd gather cost flips every
+    borderline shape to unpack."""
+    expensive = RouteConstants(gather_cost=1e9)
+    for m, k, n in [(32, 64, 256), (512, 32, 16), (2048, 12, 8)]:
+        assert ops.choose_route(m=m, k=k, n=n, g=1, t=4) == "lut"
+        assert ops.choose_route(m=m, k=k, n=n, g=1, t=4,
+                                constants=expensive) == "unpack"
+
+
+# ---------------------------------------------------------------------------
+# multi-bucket CompiledModel + engine parity
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("t,weight_dtype", [(4, "float32"), (4, "int8"),
+                                            (16, "float32"), (16, "int8")])
+def test_compile_packed_matches_reference_across_buckets(small, t,
+                                                         weight_dtype):
+    """The acceptance sweep through the new API: packed == reference
+    bit-for-bit, with requests served through DIFFERENT buckets."""
+    cfg, params, img = small
+    cfg = dataclasses.replace(cfg, timesteps=t)
+    plan = ExecutionPlan(weight_dtype=weight_dtype, batch_buckets=(2, 8))
+    packed = infer_compile(params, cfg, plan, backend="packed")
+    ref = infer_compile(params, cfg, plan, backend="reference")
+    lp = packed.logits(img)                    # 5 rows -> 2+2+2-pad steps
+    exact(lp, ref.logits(img))
+    # bucket invariance: the same image through the 2-bucket and the
+    # 8-bucket produces identical rows
+    big = jnp.concatenate([img, img[:3]])      # 8 rows -> one 8-bucket step
+    exact(packed.logits(big)[:5], lp)
+    eng = MicroBatchEngine(packed)
+    eng.submit(np.asarray(img[:2]))            # backlog 2 -> bucket 2
+    eng.run()
+    eng.submit(np.asarray(big))                # backlog 8 -> bucket 8
+    done = sorted(eng.run(), key=lambda r: r.rid)
+    assert {eng.pick_bucket(2), eng.pick_bucket(8)} == {2, 8}
+    want = np.asarray(packed.classify(big)).tolist()
+    assert [int(x) for x in done[0].labels] == want[:2]
+    assert [int(x) for x in done[1].labels] == want
+
+
+def test_compiled_step_rejects_non_bucket_batch(small):
+    cfg, params, img = small
+    model = infer_compile(params, cfg, ExecutionPlan(batch_buckets=(2, 8)))
+    with pytest.raises(ValueError, match="not a compiled bucket"):
+        model.step(np.asarray(img)[:3])
+
+
+def test_engine_pad_waste_accounting(small):
+    """Multi-bucket dispatch cuts pad waste, and the engine reports it:
+    3 images over buckets (2, 8) pad 3->8 single-bucket but 2+1->2+2
+    multi-bucket."""
+    cfg, params, img = small
+    imgs = np.asarray(img)[:3]
+    single = MicroBatchEngine(
+        infer_compile(params, cfg, ExecutionPlan(batch_buckets=(8,))))
+    multi = MicroBatchEngine(
+        infer_compile(params, cfg, ExecutionPlan(batch_buckets=(2, 8))))
+    for eng in (single, multi):
+        for i in range(3):                     # one image per request
+            eng.submit(imgs[i:i + 1])
+        eng.run()
+    assert single.total_rows == 8 and single.padded_rows == 5
+    assert multi.total_rows == 4 and multi.padded_rows == 1
+    assert multi.pad_waste < single.pad_waste
+    s = multi.stats()
+    assert s["pad_waste"] == 0.25 and s["padded_rows"] == 1
+    assert s["images"] == 3 and s["requests"] == 3
+    assert s["latency_p95_s"] is not None
+
+
+def test_engine_rejects_inflight_rid_and_completes_empty(small):
+    cfg, params, img = small
+    model = infer_compile(params, cfg, ExecutionPlan(batch_buckets=(2,)))
+    eng = MicroBatchEngine(model)
+    imgs = np.asarray(img)
+    eng.submit(Request(rid=0, images=imgs[:2]))
+    with pytest.raises(ValueError, match="already in flight"):
+        eng.submit(Request(rid=0, images=imgs[2:]))
+    eng.run()
+    eng.submit(Request(rid=0, images=imgs[:2]))   # completed rid reusable
+    # a zero-image request completes immediately, with no queue entry
+    empty = eng.submit(imgs[:0])
+    assert empty in eng.done and empty.labels == []
+    done = eng.run()
+    assert eng.stats()["requests"] == len(done) == 3
+
+
+def test_engine_mixed_requests_match_direct_classify(small):
+    cfg, params, img = small
+    model = infer_compile(params, cfg, ExecutionPlan(batch_buckets=(2, 4)))
+    eng = MicroBatchEngine(model)
+    imgs = np.asarray(img)
+    eng.submit(Request(rid=0, images=imgs[:3]))
+    eng.submit(Request(rid=1, images=imgs[3:]))
+    done = sorted(eng.run(), key=lambda r: r.rid)
+    got = [lab for r in done for lab in r.labels]
+    assert got == np.asarray(model.classify(imgs)).tolist()
+
+
+# ---------------------------------------------------------------------------
+# autotuned constants, end to end
+# ---------------------------------------------------------------------------
+
+def test_autotune_fit_and_plan_accepted_end_to_end(small):
+    """fit_constants on synthetic timings (generated FROM a known cost
+    model) recovers constants that reproduce its decisions, and the
+    resulting ExecutionPlan compiles and serves bit-exactly."""
+    from autotune_routes import fit_constants
+
+    true = RouteConstants(gather_cost=6.0, transpose_cost=1.5,
+                          unpack_cost=12.0)
+    alpha = 1e-9                                # seconds per FMA
+    samples = []
+    for m, k, n, g in [(64, 32, 16, 1), (256, 64, 64, 1), (512, 32, 32, 1),
+                       (1024, 64, 32, 2), (2048, 32, 16, 1),
+                       (256, 128, 128, 1)]:
+        t = 8 * g
+        c = -(-k // 8)
+        samples.append({
+            "m": m, "k": k, "n": n, "g": g, "t": t, "c": c,
+            "table_bytes": 32 * k * n,
+            "unpack_s": alpha * t * m * k * (n + true.unpack_cost),
+            "lut_s": alpha * (t * m * c * n * true.gather_cost
+                              + g * m * k * true.transpose_cost),
+        })
+    fitted = fit_constants(samples)
+    assert fitted.gather_cost == pytest.approx(true.gather_cost, rel=0.05)
+    assert fitted.unpack_cost == pytest.approx(true.unpack_cost, rel=0.15)
+
+    cfg, params, img = small
+    plan = ExecutionPlan.from_json(json.dumps(
+        {"route_constants": fitted.to_dict(), "batch_buckets": [2, 8]}))
+    packed = infer_compile(params, cfg, plan, backend="packed")
+    ref = infer_compile(params, cfg, plan, backend="reference")
+    exact(packed.logits(img), ref.logits(img))
+
+
+# ---------------------------------------------------------------------------
+# the deprecation shim
+# ---------------------------------------------------------------------------
+
+def test_session_shim_warns_and_delegates(small):
+    cfg, params, img = small
+    with pytest.warns(DeprecationWarning, match="compile"):
+        sess = InferenceSession(params, cfg, backend="packed", batch_size=2)
+    assert isinstance(sess.compiled, CompiledModel)
+    assert sess.batch_size == 2 and sess.weight_dtype == "float32"
+    assert sess.plan == sess.compiled.plan.routes and sess.plan
+    model = infer_compile(params, cfg, ExecutionPlan(batch_buckets=(2,)))
+    exact(sess.logits(img), model.logits(img))
+    exact(sess.classify(img), model.classify(img))
