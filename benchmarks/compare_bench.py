@@ -71,6 +71,28 @@ def compare(current: dict, baseline: dict, *, min_ratio: float):
     if baseline.get("serving") and not current.get("serving"):
         failures.append("baseline has engine-level serving rows but the "
                         "current record lost them")
+    # serving-under-load rows (open-loop goodput/p99/SLO — absolute numbers
+    # are runner noise, but the rows must survive AND keep the zero-drop
+    # contract: an accepted request is a promise)
+    for s in current.get("serving_load", []):
+        print(f"serving_load rps={s['rps']:g}: goodput "
+              f"{s['goodput_fps']:.1f} fps, p99 {s.get('latency_p99_s')}s, "
+              f"slo_attainment {s.get('slo_attainment')}, "
+              f"rejected {s.get('requests_rejected')}, "
+              f"dropped {s.get('requests_dropped')}")
+        if s.get("requests_dropped", 0):
+            failures.append(
+                f"serving_load rps={s['rps']:g} dropped "
+                f"{s['requests_dropped']} accepted request(s)")
+    if baseline.get("serving_load") and not current.get("serving_load"):
+        failures.append("baseline has serving-under-load rows but the "
+                        "current record lost them")
+    elif baseline.get("serving_load") and len(current.get("serving_load", [])) \
+            < len(baseline["serving_load"]):
+        failures.append(
+            f"serving-under-load rows shrank: "
+            f"{len(current['serving_load'])} vs committed "
+            f"{len(baseline['serving_load'])} arrival rates")
     geomean = 1.0
     for r in ratios:
         geomean *= r

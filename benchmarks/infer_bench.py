@@ -22,6 +22,11 @@ micro-batching engine (multi-bucket dispatch) and records achieved fps vs
 the paper's 30 fps target, p50/p95 latency, and pad waste — the
 engine-level numbers production cares about, in the same trajectory.
 
+A third layer, SERVING UNDER LOAD, replays open-loop Poisson arrival
+traces at two rates through ``repro.serve.AsyncServeRuntime`` and records
+what a closed-loop drain cannot: goodput, p99 latency, and SLO attainment
+(``serving_load`` rows; ``compare_bench.py`` guards them non-lossy).
+
   PYTHONPATH=src python benchmarks/infer_bench.py [--batch-size 8] [--out [f]]
   PYTHONPATH=src python benchmarks/infer_bench.py --smoke     # tiny, CI gate
 """
@@ -42,6 +47,8 @@ from repro.core.spike import num_plane_groups
 from repro.core.spikformer import SpikformerConfig, init as spik_init
 from repro.infer import (ExecutionPlan, MicroBatchEngine, benchmark_session,
                          compile as infer_compile)
+from repro.serve import (AsyncServeRuntime, ServePolicy, image_maker,
+                         poisson_trace, run_open_loop)
 
 REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
 DEFAULT_OUT = REPO_ROOT / "BENCH_infer.json"
@@ -91,18 +98,33 @@ def run_point(params, cfg, *, timesteps: int, weight_dtype: str,
     }
 
 
-def run_serving(params, cfg, *, timesteps: int, weight_dtype: str,
-                buckets, requests: int, seed: int) -> dict:
+def serving_models(params, cfg, *, buckets):
+    """Lazy cache of warmed multi-bucket packed models keyed by
+    (timesteps, weight_dtype) — the engine-level serving sweep and the
+    serving-under-load sweep share one compile per point instead of each
+    paying their own."""
+    cache = {}
+
+    def get(timesteps: int, weight_dtype: str):
+        key = (timesteps, weight_dtype)
+        if key not in cache:
+            c = dataclasses.replace(cfg, timesteps=timesteps)
+            model = infer_compile(params, c,
+                                  ExecutionPlan(backend="packed",
+                                                weight_dtype=weight_dtype,
+                                                batch_buckets=tuple(buckets)))
+            cache[key] = (model, model.warmup())
+        return cache[key]
+
+    return get
+
+
+def run_serving(model, compile_s: float, *, timesteps: int,
+                weight_dtype: str, requests: int, seed: int) -> dict:
     """Engine-level serving point: Poisson-ish mixed-size requests through
     the micro-batching engine over a multi-bucket compiled model. Reports
     achieved fps vs the paper's 30 fps target, p50/p95 latency, and pad
     waste (the multi-bucket-dispatch metric)."""
-    cfg = dataclasses.replace(cfg, timesteps=timesteps)
-    model = infer_compile(params, cfg,
-                          ExecutionPlan(backend="packed",
-                                        weight_dtype=weight_dtype,
-                                        batch_buckets=tuple(buckets)))
-    compile_s = model.warmup()
     eng = MicroBatchEngine(model)
     rng = np.random.default_rng(seed + 3)
     shape = model.input_shape()[1:]
@@ -119,12 +141,47 @@ def run_serving(params, cfg, *, timesteps: int, weight_dtype: str,
     }
 
 
+def run_serving_load(model, *, timesteps: int, weight_dtype: str,
+                     rates, duration_s: float, slo_ms: float,
+                     seed: int) -> list:
+    """Serving-under-load points: the SAME compiled model serves an
+    open-loop Poisson trace at each arrival rate through the async runtime.
+    Reports goodput, p99 latency, and SLO attainment — arrival-bounded
+    numbers the closed-loop serving sweep cannot produce."""
+    rows = []
+    for rps in rates:
+        policy = ServePolicy(max_wait_ms=10.0, slo_ms=slo_ms,
+                             max_queue_images=512)
+        trace = poisson_trace(rps=rps, duration_s=duration_s,
+                              seed=seed + 5, images_per_request=(1, 3))
+        with AsyncServeRuntime(model, policy=policy) as rt:
+            metrics = run_open_loop(
+                rt, trace, image_maker(model.input_shape()[1:],
+                                       seed=seed + 6),
+                slo_ms=slo_ms)
+        stats = rt.stats()
+        rows.append({
+            "timesteps": timesteps,
+            "weight_dtype": weight_dtype,
+            "rps": rps,
+            "duration_s": duration_s,
+            **metrics,
+            "pad_waste": stats["pad_waste"],
+            "batches": stats["batches"],
+        })
+    return rows
+
+
 def run(*, batch_size: int = 8, batches: int = 4, repeats: int = 3,
         seed: int = 0, img_size: int = 32, dim: int = 64, depth: int = 2,
         mode: str = "full",
         sweep=((4, "float32"), (4, "int8"), (16, "float32"), (16, "int8")),
         serving_sweep=((4, "float32"), (16, "int8")),
-        serving_requests: int = 24) -> dict:
+        serving_requests: int = 24,
+        load_point=(4, "float32"),
+        load_rates=(64.0, 256.0),
+        load_duration_s: float = 2.0,
+        load_slo_ms: float = 100.0) -> dict:
     cfg = SpikformerConfig().scaled(img_size=img_size, dim=dim, depth=depth)
     params = spik_init(jax.random.PRNGKey(seed), cfg)
 
@@ -133,10 +190,15 @@ def run(*, batch_size: int = 8, batches: int = 4, repeats: int = 3,
                         repeats=repeats, seed=seed)
               for t, wd in sweep]
     buckets = (max(1, batch_size // 4), batch_size)
-    serving = [run_serving(params, cfg, timesteps=t, weight_dtype=wd,
-                           buckets=buckets, requests=serving_requests,
-                           seed=seed)
+    get_model = serving_models(params, cfg, buckets=buckets)
+    serving = [run_serving(*get_model(t, wd), timesteps=t, weight_dtype=wd,
+                           requests=serving_requests, seed=seed)
                for t, wd in serving_sweep]
+    serving_load = run_serving_load(
+        get_model(*load_point)[0],
+        timesteps=load_point[0], weight_dtype=load_point[1],
+        rates=load_rates, duration_s=load_duration_s,
+        slo_ms=load_slo_ms, seed=seed)
 
     # PR-1-compatible trajectory fields come from the (4, float32) point
     # when the sweep carries one, else the first point
@@ -159,6 +221,7 @@ def run(*, batch_size: int = 8, batches: int = 4, repeats: int = 3,
         "activation_traffic_ratio": base["activation_traffic_ratio"],
         "sweep": points,
         "serving": serving,
+        "serving_load": serving_load,
         "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
     }
     return record
@@ -213,7 +276,11 @@ def main(argv=None):
               mode="smoke" if args.smoke else "full")
     if args.smoke:
         kw.update(img_size=16, dim=32, depth=1, serving_requests=6,
-                  serving_sweep=((4, "float32"),))
+                  serving_sweep=((4, "float32"),),
+                  # still two arrival rates: the acceptance contract is
+                  # serving-under-load rows at >= 2 rates, smoke included
+                  load_rates=(40.0, 120.0), load_duration_s=0.75,
+                  load_slo_ms=150.0)
 
     record = run(**kw)
     print(json.dumps(record))

@@ -259,4 +259,30 @@ registry.register_backend(
     aliases=("float",),
     overwrite=True)
 
+# The Pallas-pinned packed backend: the registration path the registry
+# docstring promises, as a real registration. Same PackedBackend class,
+# pallas=True forced — the TPU kernel route (interpret mode off-TPU), so
+# route planning never builds (C,256,N) gather tables for it (the Pallas
+# branch ignores them; declared here so the capability is plan-visible
+# without asking the instance).
+def _packed_pallas_factory(*, pallas=True):
+    if pallas is not True:
+        # the spec's wants_lut_tables=False assumes the Pallas route; a
+        # pallas=False instance here would run the CPU gather route against
+        # boolean table flags — reject at the door, don't crash in the jit
+        raise ValueError("packed_pallas pins pallas=True; for the CPU "
+                         "route use backend='packed' (optionally with "
+                         "backend_options={'pallas': False})")
+    return PackedBackend(pallas=True)
+
+
+registry.register_backend(
+    "packed_pallas",
+    _packed_pallas_factory,
+    weight_dtypes=("float32", "int8"),
+    device_kinds=("tpu",),
+    wants_lut_tables=False,
+    aliases=("pallas",),
+    overwrite=True)             # survive importlib.reload of this module
+
 get_backend = registry.get_backend

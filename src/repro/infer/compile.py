@@ -256,6 +256,42 @@ def lower(folded, cfg: SpikformerConfig, backend, *, jit: bool = True):
 # compile() and its result
 # ---------------------------------------------------------------------------
 
+def plan_chunks(n: int, buckets) -> list:
+    """Split ``n`` rows into bucket-shaped steps, minimizing padded rows and
+    then step count: whole largest buckets peel off first, the remainder is
+    solved exactly over the bucket set (3 rows over buckets (2, 8) run 2+2
+    with one pad row, not 3 padded to 8 — but 7 rows run one 8-bucket, not
+    four 2-buckets, because the pad is the same and one dispatch beats
+    four). Returns ``[(rows, bucket), ...]``.
+
+    Module-level (not just the ``CompiledModel`` method) because the serve
+    scheduler makes its wait-vs-dispatch decisions over the SAME split the
+    model will execute — one implementation, no drift.
+    """
+    buckets = tuple(sorted({int(b) for b in buckets}))
+    if not buckets or buckets[0] < 1:
+        raise ValueError(f"buckets must be >= 1, got {buckets!r}")
+    chunks = []
+    bmax = buckets[-1]
+    while n >= bmax:
+        chunks.append((bmax, bmax))
+        n -= bmax
+    if n == 0:
+        return chunks
+    # exact DP on the remainder (< largest bucket): lexicographic
+    # (padded rows, steps) minimum, reconstructed front-first
+    best = {0: (0, 0, None)}            # rows left -> (pad, steps, b)
+    for r in range(1, n + 1):
+        best[r] = min((best[r - min(b, r)][0] + b - min(b, r),
+                       best[r - min(b, r)][1] + 1, b)
+                      for b in buckets)
+    while n:
+        b = best[n][2]
+        chunks.append((min(b, n), b))
+        n -= min(b, n)
+    return chunks
+
+
 class CompiledModel:
     """A Spikformer lowered under an ``ExecutionPlan``: one jit-compiled
     fixed-shape step per batch bucket over an annotated folded tree.
@@ -298,31 +334,9 @@ class CompiledModel:
         return self.buckets[-1]
 
     def plan_chunks(self, n: int) -> list:
-        """Split ``n`` rows into compiled-bucket steps, minimizing padded
-        rows and then step count: whole largest buckets peel off first, the
-        remainder is solved exactly over the bucket set (3 rows over
-        buckets (2, 8) runs 2+2 with one pad row, not 3 padded to 8 — but
-        7 rows run one 8-bucket, not four 2-buckets, because the pad is the
-        same and one dispatch beats four). Returns [(rows, bucket), ...]."""
-        chunks = []
-        bmax = self.buckets[-1]
-        while n >= bmax:
-            chunks.append((bmax, bmax))
-            n -= bmax
-        if n == 0:
-            return chunks
-        # exact DP on the remainder (< largest bucket): lexicographic
-        # (padded rows, steps) minimum, reconstructed front-first
-        best = {0: (0, 0, None)}            # rows left -> (pad, steps, b)
-        for r in range(1, n + 1):
-            best[r] = min((best[r - min(b, r)][0] + b - min(b, r),
-                           best[r - min(b, r)][1] + 1, b)
-                          for b in self.buckets)
-        while n:
-            b = best[n][2]
-            chunks.append((min(b, n), b))
-            n -= min(b, n)
-        return chunks
+        """Split ``n`` rows into compiled-bucket steps via the module-level
+        pad-minimizing ``plan_chunks`` over this model's bucket set."""
+        return plan_chunks(n, self.buckets)
 
     # -- execution ----------------------------------------------------------
 

@@ -21,6 +21,14 @@ guards its regression.
 This is the paper's real-time classification loop (VESTA sustains ~30 fps
 on Spikformer V2); drivers compare ``stats()["fps"]`` against that target.
 ``repro.launch.serve_spikformer`` is the CLI wrapper.
+
+This module also owns the pieces the engine SHARES with the asynchronous
+continuous-batching runtime (``repro.serve.runtime``): submit-door request
+validation (``validate_images``), batch assembly (``assemble_batch``),
+per-step accounting (``StepAccounting``), and the latency-percentile
+summary (``latency_summary``) — one implementation for the sync and async
+serving paths, which is part of why an identical request trace produces
+bit-identical labels through both.
 """
 from __future__ import annotations
 
@@ -47,6 +55,104 @@ class Request:
         return self.t_done - self.t_submit
 
 
+# ---------------------------------------------------------------------------
+# Shared serve plumbing: the sync engine below and the async runtime in
+# repro.serve.runtime both build on these, so batch shapes, pad accounting
+# and latency reporting cannot drift between the two paths.
+# ---------------------------------------------------------------------------
+
+def validate_images(images, image_shape) -> np.ndarray:
+    """Validate a request's images at the ``submit()`` door against the
+    compiled model's input spec and return them as ``(n, H, W, C)`` uint8.
+
+    A malformed request must fail HERE, with an error naming the expected
+    per-image ``(H, W, C)`` — not several layers deep in a jitted step with
+    a shape error about a tensor the caller never constructed. Accepted:
+    uint8 directly; other integer dtypes if every pixel is in [0, 255]
+    (cast); anything else (floats, bools) is rejected.
+    """
+    arr = np.asarray(images)
+    image_shape = tuple(int(d) for d in image_shape)
+    if arr.ndim != 4 or tuple(arr.shape[1:]) != image_shape:
+        raise ValueError(
+            f"request images have shape {tuple(arr.shape)}; this compiled "
+            f"model expects (n, H, W, C) = (n, {image_shape[0]}, "
+            f"{image_shape[1]}, {image_shape[2]})")
+    if arr.dtype != np.uint8:
+        if not np.issubdtype(arr.dtype, np.integer):
+            raise ValueError(
+                f"request images have dtype {arr.dtype}; expected uint8 "
+                "pixel values in [0, 255]")
+        if arr.size and (int(arr.min()) < 0 or int(arr.max()) > 255):
+            raise ValueError(
+                f"request images of dtype {arr.dtype} contain values "
+                f"outside [0, 255]; cannot safely cast to uint8 pixels")
+        arr = arr.astype(np.uint8)
+    return arr
+
+
+def assemble_batch(images: list, bucket: int):
+    """Stack per-image arrays and zero-pad up to the bucket shape.
+
+    Returns ``(batch, pad)`` with ``batch.shape[0] == bucket`` and ``pad``
+    the number of appended zero rows.
+    """
+    batch = np.stack(images)
+    pad = bucket - len(images)
+    if pad:
+        batch = np.concatenate(
+            [batch, np.zeros((pad, *batch.shape[1:]), batch.dtype)])
+    return batch, pad
+
+
+@dataclasses.dataclass
+class StepAccounting:
+    """Per-step serving accounting: batches, rows, pad waste, timing."""
+    batches: int = 0
+    images: int = 0
+    padded_rows: int = 0
+    total_rows: int = 0
+    busy_s: float = 0.0         # model-step compute only
+    wall_s: float = 0.0         # whole steps incl. batch assembly
+
+    def record_step(self, *, rows: int, bucket: int, busy_s: float,
+                    wall_s: float) -> None:
+        self.batches += 1
+        self.images += rows
+        self.padded_rows += bucket - rows
+        self.total_rows += bucket
+        self.busy_s += busy_s
+        self.wall_s += wall_s
+
+    @property
+    def pad_waste(self) -> float:
+        """Padded rows / total rows across all steps so far — the cost
+        multi-bucket dispatch exists to cut."""
+        return self.padded_rows / self.total_rows if self.total_rows else 0.0
+
+    @property
+    def fps(self) -> float:
+        """Images per second of step wall time (service capacity, not
+        arrival-bounded throughput — the open-loop load generator measures
+        the latter)."""
+        return self.images / self.wall_s if self.wall_s else 0.0
+
+
+def latency_summary(latencies_s, *, prefix: str = "latency_") -> dict:
+    """p50/p95/p99/mean over per-request latencies, ``None`` when empty —
+    the shared tail-latency report for engine/runtime/loadgen stats."""
+    lat = np.asarray(list(latencies_s), np.float64)
+    if not len(lat):
+        return {f"{prefix}{k}": None for k in ("p50_s", "p95_s", "p99_s",
+                                               "mean_s")}
+    return {
+        f"{prefix}p50_s": round(float(np.percentile(lat, 50)), 4),
+        f"{prefix}p95_s": round(float(np.percentile(lat, 95)), 4),
+        f"{prefix}p99_s": round(float(np.percentile(lat, 99)), 4),
+        f"{prefix}mean_s": round(float(lat.mean()), 4),
+    }
+
+
 class MicroBatchEngine:
     """Micro-batching classifier over a multi-bucket ``CompiledModel``."""
 
@@ -57,20 +163,43 @@ class MicroBatchEngine:
         self.done: list[Request] = []
         self._pending: dict[int, int] = {}  # rid -> images left
         self._next_rid = 0
-        # accounting
-        self.batches = 0
-        self.images_done = 0
-        self.padded_rows = 0
-        self.total_rows = 0
-        self.busy_s = 0.0           # model-step compute only
-        self.wall_s = 0.0           # whole steps incl. batch assembly
+        self.acct = StepAccounting()
+
+    # accounting attribute surface predates StepAccounting; keep it readable
+    @property
+    def batches(self) -> int:
+        return self.acct.batches
+
+    @property
+    def images_done(self) -> int:
+        return self.acct.images
+
+    @property
+    def padded_rows(self) -> int:
+        return self.acct.padded_rows
+
+    @property
+    def total_rows(self) -> int:
+        return self.acct.total_rows
+
+    @property
+    def busy_s(self) -> float:
+        return self.acct.busy_s
+
+    @property
+    def wall_s(self) -> float:
+        return self.acct.wall_s
 
     def submit(self, request_or_images, rid: int | None = None) -> Request:
-        """Queue a ``Request`` (or raw images, wrapped into one)."""
+        """Queue a ``Request`` (or raw images, wrapped into one). Images are
+        validated against the compiled model's input spec at this door."""
         if isinstance(request_or_images, Request):
             req = request_or_images
+            req.images = validate_images(req.images,
+                                         self.model.input_shape()[1:])
         else:
-            images = np.asarray(request_or_images, np.uint8)
+            images = validate_images(request_or_images,
+                                     self.model.input_shape()[1:])
             if rid is None:
                 rid = self._next_rid
             req = Request(rid=rid, images=images)
@@ -110,14 +239,10 @@ class MicroBatchEngine:
         bucket = self.pick_bucket(len(self.queue))
         work = [self.queue.popleft()
                 for _ in range(min(bucket, len(self.queue)))]
-        batch = np.stack([req.images[i] for req, i in work])
-        pad = bucket - len(work)
-        if pad:
-            batch = np.concatenate(
-                [batch, np.zeros((pad, *batch.shape[1:]), np.uint8)])
+        batch, _ = assemble_batch([req.images[i] for req, i in work], bucket)
         t0 = time.perf_counter()
         logits = np.asarray(self.model.step(batch))
-        self.busy_s += time.perf_counter() - t0
+        busy_s = time.perf_counter() - t0
         labels = logits[:len(work)].argmax(axis=-1)
         now = time.perf_counter()
         for (req, i), lab in zip(work, labels):
@@ -127,11 +252,8 @@ class MicroBatchEngine:
                 del self._pending[req.rid]     # rid leaves "in flight"
                 req.t_done = now
                 self.done.append(req)
-        self.batches += 1
-        self.images_done += len(work)
-        self.padded_rows += pad
-        self.total_rows += bucket
-        self.wall_s += time.perf_counter() - t_start
+        self.acct.record_step(rows=len(work), bucket=bucket, busy_s=busy_s,
+                              wall_s=time.perf_counter() - t_start)
         return len(work)
 
     def run(self) -> list[Request]:
@@ -146,30 +268,22 @@ class MicroBatchEngine:
 
     @property
     def pad_waste(self) -> float:
-        """Padded rows / total rows across all steps so far — the cost
-        multi-bucket dispatch exists to cut."""
-        return self.padded_rows / self.total_rows if self.total_rows else 0.0
+        return self.acct.pad_waste
 
     def stats(self) -> dict:
         """Serving metrics over everything processed so far."""
-        lat = np.asarray([r.latency_s for r in self.done], np.float64)
-        wall = self.wall_s
+        acct = self.acct
         return {
             "requests": len(self.done),
-            "images": self.images_done,
-            "batches": self.batches,
+            "images": acct.images,
+            "batches": acct.batches,
             "buckets": list(self.buckets),
-            "wall_s": round(wall, 4),
-            "fps": round(self.images_done / wall, 2) if wall else 0.0,
+            "wall_s": round(acct.wall_s, 4),
+            "fps": round(acct.fps, 2),
             "paper_fps": PAPER_FPS,
-            "realtime": bool(wall and self.images_done / wall >= PAPER_FPS),
-            "padded_rows": self.padded_rows,
-            "total_rows": self.total_rows,
-            "pad_waste": round(self.pad_waste, 4),
-            "latency_p50_s": round(float(np.percentile(lat, 50)), 4)
-            if len(lat) else None,
-            "latency_p95_s": round(float(np.percentile(lat, 95)), 4)
-            if len(lat) else None,
-            "latency_mean_s": round(float(lat.mean()), 4)
-            if len(lat) else None,
+            "realtime": bool(acct.wall_s and acct.fps >= PAPER_FPS),
+            "padded_rows": acct.padded_rows,
+            "total_rows": acct.total_rows,
+            "pad_waste": round(acct.pad_waste, 4),
+            **latency_summary(r.latency_s for r in self.done),
         }

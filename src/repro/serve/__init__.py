@@ -1,0 +1,17 @@
+"""Asynchronous continuous-batching serving over a ``CompiledModel`` —
+the open-loop half of the serving story. ``AsyncServeRuntime`` accepts
+requests from caller threads into a bounded queue and completes futures as
+the background worker's bucket steps finish; every scheduling decision is
+the pure, clock-injected ``ContinuousBatchingScheduler``; ``loadgen``
+measures goodput / tail latency / SLO attainment under a real arrival
+process. See README.md in this directory."""
+from .loadgen import Arrival, image_maker, poisson_trace, run_open_loop
+from .runtime import AsyncRequest, AsyncServeRuntime
+from .scheduler import (ContinuousBatchingScheduler, Decision, QueueFull,
+                        ServePolicy)
+
+__all__ = [
+    "AsyncRequest", "AsyncServeRuntime",
+    "ContinuousBatchingScheduler", "Decision", "QueueFull", "ServePolicy",
+    "Arrival", "image_maker", "poisson_trace", "run_open_loop",
+]

@@ -1,0 +1,140 @@
+"""Open-loop load generation against the async serving runtime.
+
+A closed-loop driver (submit everything, drain, divide) measures the
+server's best case: arrivals conveniently wait for capacity. Real-time
+claims — VESTA's sustained ~30 fps — are open-loop properties: requests
+arrive on their OWN schedule whether or not the server kept up, and the
+numbers that matter are goodput (work completed within its SLO per second
+of wall time), tail latency under that arrival process (p99, not mean),
+and SLO attainment. This module produces exactly those numbers.
+
+    trace = poisson_trace(rps=60, duration_s=3, seed=0)
+    with AsyncServeRuntime(model, policy=ServePolicy(slo_ms=100)) as rt:
+        metrics = run_open_loop(rt, trace,
+                                image_maker(model.input_shape()[1:], seed=1),
+                                slo_ms=100)
+
+The trace is a plain list of ``Arrival`` values, deterministic from its
+seed, so a trace can be replayed — through the async runtime, or through
+the sync engine for the bit-identical-labels parity check — and committed
+next to a benchmark record. (The rid-aligned replay comparison assumes a
+ZERO-REJECTION run: a rejected submit consumes no runtime rid, shifting
+every later rid relative to a replay that submits all arrivals. Align on
+per-request labels from the returned handles when rejections are
+possible.)
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import numpy as np
+
+from ..infer.engine import latency_summary
+from .scheduler import QueueFull
+
+
+@dataclasses.dataclass(frozen=True)
+class Arrival:
+    """One scheduled request: submit ``n_images`` at ``t_s`` seconds after
+    the run starts."""
+    t_s: float
+    n_images: int
+
+
+def poisson_trace(*, rps: float, duration_s: float, seed: int,
+                  images_per_request=(1, 1)) -> list:
+    """Poisson arrival process: exponential inter-arrival times at ``rps``
+    requests/second for ``duration_s``, each request carrying a uniform
+    number of images in ``images_per_request`` (inclusive bounds).
+    Deterministic from ``seed``."""
+    if rps <= 0 or duration_s <= 0:
+        raise ValueError(f"rps and duration_s must be > 0, got "
+                         f"{rps!r}, {duration_s!r}")
+    lo, hi = images_per_request
+    rng = np.random.default_rng(seed)
+    trace, t = [], 0.0
+    while True:
+        t += float(rng.exponential(1.0 / rps))
+        if t >= duration_s:
+            return trace
+        trace.append(Arrival(t_s=t, n_images=int(rng.integers(lo, hi + 1))))
+
+
+def image_maker(image_shape, *, seed: int):
+    """A deterministic ``make(index, n) -> (n, H, W, C) uint8`` factory for
+    synthetic request payloads; same seed + same call sequence = same
+    images (what lets a trace replay bit-identically through the sync and
+    async paths)."""
+    image_shape = tuple(int(d) for d in image_shape)
+    rng = np.random.default_rng(seed)
+
+    def make(index: int, n: int):
+        return rng.integers(0, 256, (n, *image_shape), dtype=np.uint8)
+
+    return make
+
+
+def run_open_loop(runtime, trace, make_images, *, slo_ms: float,
+                  result_timeout_s: float = 60.0, clock=time.perf_counter,
+                  sleep=time.sleep) -> dict:
+    """Replay ``trace`` open-loop against ``runtime`` and measure.
+
+    Each arrival is submitted at its scheduled time regardless of what has
+    completed — when the server falls behind, latency (and eventually
+    admission-control rejections) absorb the difference; the generator
+    never throttles. After the last arrival the run waits for every
+    ACCEPTED request; one that fails to complete within
+    ``result_timeout_s`` counts as ``dropped`` — the acceptance contract is
+    zero, because an accepted request is a promise.
+
+    Returns the serving-under-load metrics: offered vs completed rates,
+    goodput (within-SLO images/s over the whole open-loop window),
+    p50/p95/p99 latency, and SLO attainment.
+    """
+    slo_s = slo_ms / 1e3
+    accepted, rejected = [], 0
+    t0 = clock()
+    for k, a in enumerate(trace):
+        delay = t0 + a.t_s - clock()
+        if delay > 0:
+            sleep(delay)
+        imgs = make_images(k, a.n_images)
+        try:
+            accepted.append(runtime.submit(imgs))
+        except QueueFull:
+            rejected += 1
+    # "done" is decided by FUTURE resolution, not t_done: a request that
+    # times out here counts as dropped and must stay out of the completed
+    # metrics even if the worker finishes it later in this wait loop —
+    # one request, one bucket, metrics row internally consistent.
+    # result_timeout_s is ONE shared drain deadline, not per-request: a
+    # wedged worker fails the whole drain after that budget instead of
+    # stalling accepted_requests x timeout (hours at bench rates).
+    done, dropped = [], 0
+    drain_deadline = clock() + result_timeout_s
+    for req in accepted:
+        try:
+            req.result(timeout=max(0.0, drain_deadline - clock()))
+            done.append(req)
+        except Exception:
+            dropped += 1
+    elapsed = clock() - t0
+    images_done = sum(len(r.labels) for r in done)
+    within = [r for r in done if r.latency_s <= slo_s]
+    duration = trace[-1].t_s if trace else 0.0
+    return {
+        "requests_offered": len(trace),
+        "requests_accepted": len(accepted),
+        "requests_rejected": rejected,
+        "requests_dropped": dropped,          # accepted but never completed
+        "offered_rps": round(len(trace) / duration, 2) if duration else 0.0,
+        "elapsed_s": round(elapsed, 4),
+        "images_completed": images_done,
+        "completed_fps": round(images_done / elapsed, 2) if elapsed else 0.0,
+        "goodput_fps": round(sum(len(r.labels) for r in within) / elapsed, 2)
+        if elapsed else 0.0,
+        "slo_ms": slo_ms,
+        "slo_attainment": round(len(within) / len(done), 4) if done else None,
+        **latency_summary(r.latency_s for r in done),
+    }

@@ -1,0 +1,176 @@
+"""Continuous-batching policy: wait-vs-dispatch and admission control as a
+pure, separately-testable object.
+
+The async runtime (``repro.serve.runtime``) owns threads, queues and
+futures; every *decision* lives here, in methods that take the observable
+state (backlog, oldest submit time, the current clock reading) as explicit
+arguments and return a ``Decision`` value. Nothing in this module reads a
+wall clock or sleeps, so a test can replay any schedule deterministically
+and pin the full decision table.
+
+The policy triangle:
+
+* **Batching window** — a lone request is not dispatched the instant it
+  arrives; waiting up to ``max_wait_ms`` lets later arrivals fill the
+  bucket and amortize the step. The dispatch shape is the FIRST chunk of
+  the pad-minimizing split the compiled model itself would run
+  (``repro.infer.compile.plan_chunks`` — the same function, not a copy),
+  so a backlog of 3 over buckets (2, 8) dispatches 2 now and leaves 1 to
+  keep accumulating.
+* **SLO pressure** — with ``slo_ms`` set, the window closes early: the
+  oldest request must leave enough of its budget to actually run the step,
+  estimated from an EWMA of observed per-bucket step times
+  (``observe_step``). A scheduler that batches greedily but blows the
+  latency target has optimized the wrong number.
+* **Admission control** — ``admit()`` bounds the queue at
+  ``max_queue_images``; overload is an explicit, accounted rejection
+  (``QueueFull`` at the submit door), never silent unbounded growth.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from ..infer.compile import plan_chunks
+
+
+class QueueFull(RuntimeError):
+    """Admission control rejected a submit: the bounded queue is full.
+
+    Raised at the submit door — the caller sheds or retries; the runtime
+    never buffers beyond the configured depth.
+    """
+
+
+@dataclasses.dataclass(frozen=True)
+class ServePolicy:
+    """The scheduler's knobs, all decided before serving starts.
+
+    ``max_wait_ms`` — batching window: how long the oldest queued request
+    may wait for companions before a (possibly padded) dispatch is forced.
+    ``slo_ms`` — per-request latency target; ``None`` disables SLO pressure
+    (the window is then bounded by ``max_wait_ms`` alone).
+    ``max_queue_images`` — admission bound on queued images.
+    """
+    max_wait_ms: float = 25.0
+    slo_ms: float | None = None
+    max_queue_images: int = 512
+
+    def __post_init__(self):
+        if self.max_wait_ms < 0:
+            raise ValueError(f"max_wait_ms must be >= 0, got "
+                             f"{self.max_wait_ms!r}")
+        if self.slo_ms is not None and self.slo_ms <= 0:
+            raise ValueError(f"slo_ms must be > 0 (or None), got "
+                             f"{self.slo_ms!r}")
+        if self.max_queue_images < 1:
+            raise ValueError(f"max_queue_images must be >= 1, got "
+                             f"{self.max_queue_images!r}")
+
+    @property
+    def max_wait_s(self) -> float:
+        return self.max_wait_ms / 1e3
+
+    @property
+    def slo_s(self) -> float | None:
+        return None if self.slo_ms is None else self.slo_ms / 1e3
+
+
+@dataclasses.dataclass(frozen=True)
+class Decision:
+    """One scheduling decision, as a value.
+
+    ``action`` is "idle" (nothing queued — sleep until a submit),
+    "wait" (keep the batching window open for ``wait_s`` more seconds),
+    or "dispatch" (run ``rows`` real rows in a ``bucket``-shaped step now).
+    ``reason`` names the rule that fired — it surfaces in logs and pins the
+    decision table in tests.
+    """
+    action: str
+    bucket: int = 0
+    rows: int = 0
+    wait_s: float = 0.0
+    reason: str = ""
+
+
+class ContinuousBatchingScheduler:
+    """Wait-vs-dispatch policy over a compiled model's bucket set.
+
+    Construct from the bucket tuple (``model.buckets``) and a
+    ``ServePolicy``. All methods are deterministic functions of their
+    arguments and the observed step-time EWMAs — no hidden clock.
+    """
+
+    def __init__(self, buckets, policy: ServePolicy | None = None):
+        self.buckets = tuple(sorted({int(b) for b in buckets}))
+        if not self.buckets or self.buckets[0] < 1:
+            raise ValueError(f"buckets must be >= 1, got {buckets!r}")
+        self.policy = policy or ServePolicy()
+        self._step_s: dict[int, float] = {}   # bucket -> EWMA step seconds
+
+    # -- admission ----------------------------------------------------------
+
+    def admit(self, queued_images: int, new_images: int) -> bool:
+        """May a request of ``new_images`` enter a queue currently holding
+        ``queued_images``? Pure bound check; the runtime turns False into
+        an explicit ``QueueFull`` at the submit door."""
+        return queued_images + new_images <= self.policy.max_queue_images
+
+    # -- service-time model -------------------------------------------------
+
+    def observe_step(self, bucket: int, seconds: float) -> None:
+        """Feed one measured step time into the per-bucket EWMA the SLO
+        deadline uses. The runtime calls this after every step."""
+        prev = self._step_s.get(bucket)
+        self._step_s[bucket] = (seconds if prev is None
+                                else 0.8 * prev + 0.2 * seconds)
+
+    def service_estimate(self, bucket: int) -> float:
+        """Expected step seconds for ``bucket``: its own EWMA when observed,
+        else the slowest observed bucket (conservative — over-estimating
+        dispatches earlier, never later), else 0 (no data: only
+        ``max_wait_ms`` bounds the window)."""
+        if bucket in self._step_s:
+            return self._step_s[bucket]
+        if self._step_s:
+            return max(self._step_s.values())
+        return 0.0
+
+    # -- the decision -------------------------------------------------------
+
+    def decide(self, *, backlog: int, oldest_submit_s: float | None,
+               now_s: float, draining: bool = False) -> Decision:
+        """The wait-vs-dispatch decision for the current queue state.
+
+        ``backlog`` is queued images, ``oldest_submit_s`` the submit
+        timestamp of the request at the head of the queue (same clock as
+        ``now_s``). ``draining=True`` (runtime shutdown) closes the
+        batching window: anything queued dispatches immediately in its
+        pad-minimizing shape.
+        """
+        if backlog <= 0:
+            return Decision(action="idle", reason="queue empty")
+        bmax = self.buckets[-1]
+        if backlog >= bmax:
+            # a full largest bucket never waits: zero pad, max amortization
+            return Decision(action="dispatch", bucket=bmax, rows=bmax,
+                            reason="backlog fills the largest bucket")
+        rows, bucket = plan_chunks(backlog, self.buckets)[0]
+        if draining:
+            return Decision(action="dispatch", bucket=bucket, rows=rows,
+                            reason="draining")
+        if oldest_submit_s is None:
+            raise ValueError("non-empty backlog requires oldest_submit_s")
+        deadline = oldest_submit_s + self.policy.max_wait_s
+        reason = "max_wait deadline reached"
+        if self.policy.slo_s is not None:
+            # leave the oldest request enough budget to actually run
+            slo_deadline = (oldest_submit_s + self.policy.slo_s
+                            - self.service_estimate(bucket))
+            if slo_deadline < deadline:
+                deadline, reason = slo_deadline, "SLO pressure"
+        if now_s >= deadline:
+            return Decision(action="dispatch", bucket=bucket, rows=rows,
+                            reason=reason)
+        return Decision(action="wait", wait_s=deadline - now_s,
+                        reason=f"batching window open ({reason.split()[0]} "
+                               f"deadline in {deadline - now_s:.4f}s)")

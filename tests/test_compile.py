@@ -92,6 +92,39 @@ def test_register_backend_overwrite_takes_over_alias():
     assert backend_spec("float").name == "reference"     # restored
 
 
+def test_packed_pallas_backend_registered_and_compiles(small):
+    """The registration path the registry docstring promises, exercised
+    end-to-end: "packed_pallas" (alias "pallas") resolves through
+    ``compile()`` to a Pallas-pinned PackedBackend, declares TPU device
+    kind, and — capability-declared, no instance interrogation — skips
+    the (C,256,N) gather-table build: LUT-planned layers carry the cheap
+    boolean flag, not tables."""
+    cfg, params, _ = small
+    spec = backend_spec("packed_pallas")
+    assert backend_spec("pallas").name == "packed_pallas"   # alias resolves
+    assert spec.device_kinds == ("tpu",)
+    assert spec.wants_lut_tables is False
+    assert "packed_pallas" in list_backends(device_kind="tpu")
+    assert "packed_pallas" not in list_backends(device_kind="cpu")
+
+    model = infer_compile(params, cfg, ExecutionPlan(backend="pallas",
+                                                     batch_buckets=(2,)))
+    assert model.backend.pallas is True
+    assert model.plan.routes                   # planning still ran
+    luts = [p for p, r in model.plan.routes.items() if r == "lut"]
+    for path in luts:
+        layer = model.folded
+        for p in path.split("/"):
+            layer = layer[p]
+        assert layer["lut"] is True            # flag, never a table
+    # the pin is real: a pallas=False override is rejected at the door
+    # (it would run the CPU gather route against boolean table flags)
+    with pytest.raises(ValueError, match="pins pallas=True"):
+        infer_compile(params, cfg,
+                      ExecutionPlan(backend="pallas",
+                                    backend_options={"pallas": False}))
+
+
 def test_unknown_backend_name_errors(small):
     cfg, params, _ = small
     with pytest.raises(ValueError, match="unknown inference backend"):

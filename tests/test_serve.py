@@ -1,0 +1,453 @@
+"""The async continuous-batching serving runtime (``repro.serve``).
+
+Three layers, three standards of proof:
+
+* the SCHEDULER is pure — its full wait-vs-dispatch decision table is
+  pinned under an injected clock, no threads, no sleeps;
+* the RUNTIME is checked against the sync engine: an identical request
+  trace must produce bit-identical labels through ``MicroBatchEngine``
+  and ``AsyncServeRuntime`` (per-image math is row-independent and
+  bucket-invariant, so batching happenstance cannot leak into labels);
+* the LOADGEN is deterministic from its seed and measures the open-loop
+  contract: every accepted request completes (zero dropped).
+"""
+import threading
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.spikformer import SpikformerConfig, init
+from repro.infer import ExecutionPlan, MicroBatchEngine, compile as \
+    infer_compile
+from repro.infer.compile import plan_chunks
+from repro.infer.engine import (StepAccounting, assemble_batch,
+                                latency_summary, validate_images)
+from repro.serve import (Arrival, AsyncServeRuntime,
+                         ContinuousBatchingScheduler, QueueFull, ServePolicy,
+                         image_maker, poisson_trace, run_open_loop)
+
+
+def exact(a, b):
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@pytest.fixture(scope="module")
+def small():
+    cfg = SpikformerConfig().scaled(img_size=16, dim=32, depth=1)
+    params = init(jax.random.PRNGKey(0), cfg)
+    model = infer_compile(params, cfg, ExecutionPlan(batch_buckets=(2, 8)))
+    model.warmup()
+    imgs = np.asarray(jax.random.randint(
+        jax.random.PRNGKey(1), (11, 16, 16, 3), 0, 256, "uint8"))
+    return cfg, model, imgs
+
+
+# ---------------------------------------------------------------------------
+# scheduler: the pinned decision table (pure, injected clock)
+# ---------------------------------------------------------------------------
+
+def sched(max_wait_ms=10.0, slo_ms=None, depth=512, buckets=(2, 8)):
+    return ContinuousBatchingScheduler(
+        buckets, ServePolicy(max_wait_ms=max_wait_ms, slo_ms=slo_ms,
+                             max_queue_images=depth))
+
+
+def test_decision_table_wait_vs_dispatch():
+    s = sched(max_wait_ms=10.0)
+    # empty queue: idle (sleep until a submit)
+    assert s.decide(backlog=0, oldest_submit_s=None, now_s=5.0).action == \
+        "idle"
+    # a full largest bucket never waits
+    d = s.decide(backlog=8, oldest_submit_s=0.0, now_s=0.0)
+    assert (d.action, d.bucket, d.rows) == ("dispatch", 8, 8)
+    d = s.decide(backlog=9, oldest_submit_s=0.0, now_s=0.0)
+    assert (d.action, d.bucket, d.rows) == ("dispatch", 8, 8)
+    # partial backlog inside the window: wait EXACTLY until the deadline
+    d = s.decide(backlog=3, oldest_submit_s=1.0, now_s=1.004)
+    assert d.action == "wait"
+    assert d.wait_s == pytest.approx(0.006)
+    # at the deadline: dispatch the FIRST chunk of the pad-minimizing
+    # split — 3 over (2, 8) runs 2 now, leaves 1 accumulating
+    d = s.decide(backlog=3, oldest_submit_s=1.0, now_s=1.010)
+    assert (d.action, d.bucket, d.rows) == ("dispatch", 2, 2)
+    assert d.reason == "max_wait deadline reached"
+
+
+def test_decision_table_tail_smaller_than_smallest_bucket():
+    s = sched(max_wait_ms=10.0)
+    # backlog 1 < smallest bucket 2: waits its window, then dispatches
+    # padded into the smallest bucket
+    d = s.decide(backlog=1, oldest_submit_s=0.0, now_s=0.0)
+    assert d.action == "wait" and d.wait_s == pytest.approx(0.010)
+    d = s.decide(backlog=1, oldest_submit_s=0.0, now_s=0.011)
+    assert (d.action, d.bucket, d.rows) == ("dispatch", 2, 1)
+
+
+def test_decision_table_slo_pressure_closes_window_early():
+    s = sched(max_wait_ms=50.0, slo_ms=30.0)
+    # no observed step times: SLO deadline = submit + slo (estimate 0),
+    # tighter than max_wait
+    d = s.decide(backlog=1, oldest_submit_s=0.0, now_s=0.0)
+    assert d.action == "wait" and d.wait_s == pytest.approx(0.030)
+    # an observed 20ms step shrinks the budget: dispatch by 30-20=10ms
+    s.observe_step(2, 0.020)
+    d = s.decide(backlog=1, oldest_submit_s=0.0, now_s=0.0)
+    assert d.action == "wait" and d.wait_s == pytest.approx(0.010)
+    d = s.decide(backlog=1, oldest_submit_s=0.0, now_s=0.0105)
+    assert d.action == "dispatch" and d.reason == "SLO pressure"
+    # EWMA: a faster step moves the estimate, deterministically
+    s.observe_step(2, 0.010)
+    assert s.service_estimate(2) == pytest.approx(0.8 * 0.020 + 0.2 * 0.010)
+    # unknown bucket: conservative (slowest observed)
+    assert s.service_estimate(8) == s.service_estimate(2)
+
+
+def test_decision_table_draining_dispatches_immediately():
+    s = sched(max_wait_ms=10_000.0)
+    d = s.decide(backlog=1, oldest_submit_s=0.0, now_s=0.0, draining=True)
+    assert (d.action, d.bucket, d.rows) == ("dispatch", 2, 1)
+    assert d.reason == "draining"
+    assert s.decide(backlog=0, oldest_submit_s=None, now_s=0.0,
+                    draining=True).action == "idle"
+
+
+def test_scheduler_admission_bound():
+    s = sched(depth=4)
+    assert s.admit(0, 4) and s.admit(3, 1)
+    assert not s.admit(3, 2) and not s.admit(0, 5)
+    with pytest.raises(ValueError, match="max_queue_images"):
+        ServePolicy(max_queue_images=0)
+    with pytest.raises(ValueError, match="slo_ms"):
+        ServePolicy(slo_ms=0)
+    with pytest.raises(ValueError, match="max_wait_ms"):
+        ServePolicy(max_wait_ms=-1)
+
+
+def test_scheduler_reuses_model_plan_chunks(small):
+    """The scheduler's dispatch shape IS the model's pad-minimizing split —
+    same function, not a copy."""
+    _, model, _ = small
+    for n in range(1, 20):
+        assert plan_chunks(n, model.buckets) == model.plan_chunks(n)
+    s = sched()
+    for backlog in range(1, 8):
+        d = s.decide(backlog=backlog, oldest_submit_s=0.0, now_s=1.0)
+        assert (d.rows, d.bucket) == model.plan_chunks(backlog)[0]
+
+
+# ---------------------------------------------------------------------------
+# shared serve plumbing (engine.py): validation, assembly, accounting
+# ---------------------------------------------------------------------------
+
+def test_validate_images_shape_and_dtype():
+    ok = validate_images(np.zeros((2, 16, 16, 3), np.uint8), (16, 16, 3))
+    assert ok.shape == (2, 16, 16, 3) and ok.dtype == np.uint8
+    # int32 in range casts; out of range refuses
+    assert validate_images(np.full((1, 16, 16, 3), 255, np.int32),
+                           (16, 16, 3)).dtype == np.uint8
+    with pytest.raises(ValueError, match=r"outside \[0, 255\]"):
+        validate_images(np.full((1, 16, 16, 3), 256, np.int32), (16, 16, 3))
+    # the error NAMES the expected per-image shape
+    with pytest.raises(ValueError, match=r"\(n, 16, 16, 3\)"):
+        validate_images(np.zeros((2, 8, 8, 3), np.uint8), (16, 16, 3))
+    with pytest.raises(ValueError, match="expected uint8"):
+        validate_images(np.zeros((2, 16, 16, 3), np.float32), (16, 16, 3))
+    # a single unbatched image is not silently promoted
+    with pytest.raises(ValueError, match=r"\(16, 16, 3\)"):
+        validate_images(np.zeros((16, 16, 3), np.uint8), (16, 16, 3))
+
+
+def test_engine_submit_door_validation(small):
+    _, model, imgs = small
+    eng = MicroBatchEngine(model)
+    with pytest.raises(ValueError, match=r"\(n, 16, 16, 3\)"):
+        eng.submit(np.zeros((1, 8, 8, 3), np.uint8))
+    with pytest.raises(ValueError, match="dtype"):
+        eng.submit(imgs[:1].astype(np.float32))
+    assert not eng.queue                  # nothing half-queued
+
+
+def test_assemble_batch_and_accounting():
+    batch, pad = assemble_batch([np.ones((4, 4), np.uint8)] * 3, 8)
+    assert batch.shape == (8, 4, 4) and pad == 5
+    assert batch[:3].all() and not batch[3:].any()
+    batch, pad = assemble_batch([np.ones((4, 4), np.uint8)] * 2, 2)
+    assert batch.shape == (2, 4, 4) and pad == 0
+    acct = StepAccounting()
+    acct.record_step(rows=3, bucket=8, busy_s=0.5, wall_s=1.0)
+    acct.record_step(rows=2, bucket=2, busy_s=0.25, wall_s=0.5)
+    assert acct.batches == 2 and acct.images == 5
+    assert acct.padded_rows == 5 and acct.total_rows == 10
+    assert acct.pad_waste == 0.5
+    assert acct.fps == pytest.approx(5 / 1.5)
+    assert latency_summary([])["latency_p99_s"] is None
+    s = latency_summary([0.1] * 99 + [1.0])
+    assert s["latency_p50_s"] == 0.1 and s["latency_p99_s"] > 0.1
+
+
+# ---------------------------------------------------------------------------
+# runtime: sync/async parity and the edge-case contract
+# ---------------------------------------------------------------------------
+
+def trace_requests(imgs):
+    """A fixed mixed-size request trace over the fixture images."""
+    sizes = (2, 1, 3, 1, 2, 2)
+    out, i = [], 0
+    for n in sizes:
+        out.append(imgs[i:i + n])
+        i += n
+    return out
+
+
+def test_identical_trace_sync_async_bit_identical_labels(small):
+    """The acceptance property: the SAME request trace through the sync
+    engine and the async runtime yields bit-identical labels, and both
+    match direct classify()."""
+    _, model, imgs = small
+    reqs = trace_requests(imgs)
+    eng = MicroBatchEngine(model)
+    for r in reqs:
+        eng.submit(r)
+    sync_done = sorted(eng.run(), key=lambda r: r.rid)
+    with AsyncServeRuntime(model,
+                           policy=ServePolicy(max_wait_ms=2.0)) as rt:
+        handles = [rt.submit(r) for r in reqs]
+        async_labels = [h.result(timeout=30) for h in handles]
+    assert [r.labels for r in sync_done] == async_labels
+    want = np.asarray(model.classify(imgs)).tolist()
+    flat = [lab for labs in async_labels for lab in labs]
+    assert flat == want[:len(flat)]
+
+
+def test_async_empty_request_completes_via_future(small):
+    _, model, imgs = small
+    with AsyncServeRuntime(model) as rt:
+        req = rt.submit(imgs[:0])
+        assert req.result(timeout=5) == []
+        assert req.t_done == req.t_submit
+        assert rt.stats()["requests"] == 1
+
+
+def test_async_rid_reuse_and_inflight_rejection(small):
+    _, model, imgs = small
+    with AsyncServeRuntime(model,
+                           policy=ServePolicy(max_wait_ms=10_000.0)) as rt:
+        first = rt.submit(imgs[:2], rid=7)     # fills bucket 2: dispatches
+        assert first.result(timeout=30) is not None
+        second = rt.submit(imgs[2:3], rid=7)   # completed rid is reusable
+        # 1 image < smallest bucket + huge window: still in flight
+        with pytest.raises(ValueError, match="already in flight"):
+            rt.submit(imgs[3:4], rid=7)
+    # close() drained: the in-flight request completed, not abandoned
+    assert second.result(timeout=1) == second.labels
+    assert len(second.labels) == 1
+    with pytest.raises(RuntimeError, match="closed"):
+        rt.submit(imgs[:1])
+
+
+def test_async_queue_full_rejection_is_explicit(small):
+    _, model, imgs = small
+    policy = ServePolicy(max_wait_ms=10_000.0, max_queue_images=3)
+    with AsyncServeRuntime(model, policy=policy) as rt:
+        kept = [rt.submit(imgs[i:i + 1]) for i in range(3)]
+        with pytest.raises(QueueFull, match="max_queue_images=3"):
+            rt.submit(imgs[3:4])
+        assert rt.stats()["requests_rejected"] == 1
+    # every ACCEPTED request still completed on drain
+    assert all(len(k.result(timeout=1)) == 1 for k in kept)
+
+
+def test_async_tail_smaller_than_smallest_bucket_pads(small):
+    """A lone request below the smallest bucket is not starved: the window
+    closes and it ships padded."""
+    _, model, imgs = small
+    with AsyncServeRuntime(model,
+                           policy=ServePolicy(max_wait_ms=1.0)) as rt:
+        req = rt.submit(imgs[:1])
+        assert len(req.result(timeout=30)) == 1
+        stats = rt.stats()
+    assert stats["padded_rows"] == 1 and stats["total_rows"] == 2
+    assert req.labels == np.asarray(model.classify(imgs[:1])).tolist()
+
+
+def test_async_submit_door_validation_rejects_before_queueing(small):
+    _, model, imgs = small
+    with AsyncServeRuntime(model) as rt:
+        with pytest.raises(ValueError, match=r"\(n, 16, 16, 3\)"):
+            rt.submit(np.zeros((1, 8, 8, 3), np.uint8))
+        with pytest.raises(ValueError, match="dtype"):
+            rt.submit(imgs[:1].astype(np.float64))
+        assert rt.stats()["queued_images"] == 0
+
+
+def test_async_streaming_callback_per_image(small):
+    _, model, imgs = small
+    got, lock = [], threading.Lock()
+
+    def on_image(rid, idx, label):
+        with lock:
+            got.append((rid, idx, label))
+
+    with AsyncServeRuntime(model,
+                           policy=ServePolicy(max_wait_ms=2.0)) as rt:
+        req = rt.submit(imgs[:3], rid=0, on_image=on_image)
+        labels = req.result(timeout=30)
+    assert sorted(got) == [(0, i, labels[i]) for i in range(3)]
+
+
+def test_async_streaming_callback_exception_does_not_kill_worker(small):
+    """A raising user callback must not wedge the runtime: the future
+    still resolves and later requests still serve."""
+    _, model, imgs = small
+
+    def bad(rid, idx, label):
+        raise RuntimeError("user callback bug")
+
+    with AsyncServeRuntime(model,
+                           policy=ServePolicy(max_wait_ms=2.0)) as rt:
+        r1 = rt.submit(imgs[:2], on_image=bad)
+        assert len(r1.result(timeout=30)) == 2
+        r2 = rt.submit(imgs[2:4])
+        assert len(r2.result(timeout=30)) == 2
+    assert rt.stats()["requests"] == 2
+
+
+class FlakyModel:
+    """CompiledModel stand-in whose step fails on demand — small enough to
+    pin the runtime's failure semantics without a real compile."""
+    buckets = (2,)
+
+    def __init__(self):
+        self.fail_next = 0
+
+    def input_shape(self, bucket=None):
+        return (2, 4, 4, 3)
+
+    def step(self, batch):
+        if self.fail_next:
+            self.fail_next -= 1
+            raise RuntimeError("step boom")
+        return np.zeros((len(batch), 10), np.float32)
+
+
+def test_async_step_failure_fails_that_batch_not_the_runtime():
+    """A failing model step resolves the affected futures with the error
+    (never a silent forever-block) and serving continues."""
+    model = FlakyModel()
+    model.fail_next = 1
+    imgs = np.zeros((2, 4, 4, 3), np.uint8)
+    with AsyncServeRuntime(model,
+                           policy=ServePolicy(max_wait_ms=2.0)) as rt:
+        bad = rt.submit(imgs)
+        with pytest.raises(RuntimeError, match="step boom"):
+            bad.result(timeout=10)
+        ok = rt.submit(imgs)                  # the worker survived
+        assert ok.result(timeout=10) == [0, 0]
+        stats = rt.stats()
+    assert stats["requests_failed"] == 1 and stats["requests"] == 1
+
+
+def test_async_submits_from_many_threads(small):
+    """The bounded queue really is thread-safe: concurrent submitters, all
+    futures complete, labels match the single-threaded classify()."""
+    _, model, imgs = small
+    want = np.asarray(model.classify(imgs)).tolist()
+    results = {}
+    with AsyncServeRuntime(model,
+                           policy=ServePolicy(max_wait_ms=2.0)) as rt:
+        def worker(i):
+            results[i] = rt.submit(imgs[i:i + 1], rid=i).result(timeout=30)
+
+        threads = [threading.Thread(target=worker, args=(i,))
+                   for i in range(8)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+    assert {i: labs[0] for i, labs in results.items()} == \
+        {i: want[i] for i in range(8)}
+
+
+# ---------------------------------------------------------------------------
+# loadgen: deterministic traces, open-loop metrics
+# ---------------------------------------------------------------------------
+
+def test_poisson_trace_deterministic_and_bounded():
+    a = poisson_trace(rps=100, duration_s=1.0, seed=3,
+                      images_per_request=(1, 3))
+    b = poisson_trace(rps=100, duration_s=1.0, seed=3,
+                      images_per_request=(1, 3))
+    assert a == b and len(a) > 20
+    assert all(0 < x.t_s < 1.0 and 1 <= x.n_images <= 3 for x in a)
+    assert [x.t_s for x in a] == sorted(x.t_s for x in a)
+    assert a != poisson_trace(rps=100, duration_s=1.0, seed=4,
+                              images_per_request=(1, 3))
+    with pytest.raises(ValueError, match="rps"):
+        poisson_trace(rps=0, duration_s=1.0, seed=0)
+
+
+def test_image_maker_deterministic(small):
+    _, model, _ = small
+    shape = model.input_shape()[1:]
+    m1, m2 = image_maker(shape, seed=5), image_maker(shape, seed=5)
+    exact(m1(0, 2), m2(0, 2))
+    exact(m1(1, 1), m2(1, 1))
+    assert m1(2, 3).shape == (3, *shape) and m1(2, 3).dtype == np.uint8
+
+
+def test_open_loop_run_completes_everything(small):
+    _, model, _ = small
+    trace = poisson_trace(rps=200, duration_s=0.3, seed=0)
+    policy = ServePolicy(max_wait_ms=5.0, slo_ms=500.0)
+    with AsyncServeRuntime(model, policy=policy) as rt:
+        m = run_open_loop(rt, trace,
+                          image_maker(model.input_shape()[1:], seed=1),
+                          slo_ms=500.0)
+    assert m["requests_offered"] == len(trace)
+    assert m["requests_accepted"] + m["requests_rejected"] == len(trace)
+    assert m["requests_dropped"] == 0                 # accepted == promise
+    assert m["images_completed"] == sum(
+        len(r.labels) for r in rt.done)
+    assert m["goodput_fps"] <= m["completed_fps"]
+    assert m["latency_p99_s"] is not None
+    assert 0.0 <= m["slo_attainment"] <= 1.0
+
+
+def test_open_loop_trace_replays_bit_identical_through_sync_engine(small):
+    """The loadgen's deterministic trace + image stream replayed through
+    the SYNC engine produces the same labels the async run produced."""
+    _, model, _ = small
+    trace = [Arrival(t_s=0.001 * (k + 1), n_images=1 + k % 3)
+             for k in range(6)]
+    shape = model.input_shape()[1:]
+    with AsyncServeRuntime(model,
+                           policy=ServePolicy(max_wait_ms=2.0)) as rt:
+        run_open_loop(rt, trace, image_maker(shape, seed=9), slo_ms=100.0)
+    async_labels = {r.rid: r.labels for r in rt.done}
+    make = image_maker(shape, seed=9)                 # fresh, same stream
+    eng = MicroBatchEngine(model)
+    for k, a in enumerate(trace):
+        eng.submit(make(k, a.n_images))
+    sync_labels = {r.rid: r.labels for r in eng.run()}
+    assert sync_labels == async_labels
+
+
+# ---------------------------------------------------------------------------
+# runtime construction contract
+# ---------------------------------------------------------------------------
+
+def test_runtime_rejects_policy_and_scheduler_together(small):
+    _, model, _ = small
+    with pytest.raises(ValueError, match="either policy or"):
+        AsyncServeRuntime(model, policy=ServePolicy(),
+                          scheduler=ContinuousBatchingScheduler((2, 8)))
+
+
+def test_runtime_close_idempotent_without_start(small):
+    _, model, _ = small
+    rt = AsyncServeRuntime(model)
+    rt.close()                              # never started: no-op
+    rt.close()
+    with pytest.raises(RuntimeError, match="closed"):
+        rt.submit(np.zeros((1, 16, 16, 3), np.uint8))
