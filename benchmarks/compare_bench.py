@@ -55,18 +55,46 @@ def compare(current: dict, baseline: dict, *, min_ratio: float):
         print(f"T={p['timesteps']}/{p['weight_dtype']}: speedup "
               f"{p['packed_speedup']:.3f} vs committed "
               f"{b['packed_speedup']:.3f} (ratio {ratio:.2f})")
-    if not ratios:
+    if not ratios and (baseline.get("sweep") or current.get("sweep")):
         # a silent pass here would let a sweep rename green-light CI forever
+        # (occupancy-only records carry no dense/packed sweep at all, so a
+        # missing sweep on BOTH sides is fine — there is nothing to lose)
         failures.append("no comparable sweep points between current and "
                         "baseline — re-commit a matching baseline")
         return failures
+    # occupancy-sweep rows (sparse-vs-dense LUT at fixed firing rates).
+    # Absolute speedups are runner-dependent, but every row must stay
+    # bit-exact and the rows themselves are non-lossy: a baseline firing
+    # rate that disappears from the current record fails the gate.
+    base_occ = {o["firing_rate"]: o for o in baseline.get("occupancy_sweep", [])}
+    for o in current.get("occupancy_sweep", []):
+        print(f"occupancy rate={o['firing_rate']:g} "
+              f"(chunk occ {o['chunk_occupancy']:.3f}, "
+              f"budget {o['max_chunks']}/{o['chunks']}): "
+              f"sparse {o['sparse_s'] * 1e6:.0f}us vs dense "
+              f"{o['dense_s'] * 1e6:.0f}us "
+              f"(speedup {o['sparse_speedup']:.2f}x, "
+              f"exact={o['exact']})")
+        if not o.get("exact", False):
+            failures.append(
+                f"occupancy rate={o['firing_rate']:g}: sparse route is not "
+                f"bit-exact against the dense LUT")
+    cur_rates = {o["firing_rate"] for o in current.get("occupancy_sweep", [])}
+    for rate in sorted(set(base_occ) - cur_rates):
+        failures.append(
+            f"occupancy-sweep row for firing rate {rate:g} present in the "
+            f"committed baseline but missing from the current record")
     # engine-level serving rows (informational: absolute fps on a CI runner
     # is noise, but the rows must exist so the serving path can't silently
     # drop out of the benchmark)
     for s in current.get("serving", []):
+        p95 = s.get("latency_p95_s")
+        # latencies are recorded in seconds at microsecond precision
+        # (latency_summary rounds to 6 decimals); print them as µs
+        p95_us = "n/a" if p95 is None else f"{p95 * 1e6:.0f}us"
         print(f"serving T={s['timesteps']}/{s['weight_dtype']}: "
               f"{s['fps']:.1f} fps (target {s.get('paper_fps', 30.0):.0f}), "
-              f"p95 {s.get('latency_p95_s')}s, "
+              f"p95 {p95_us}, "
               f"pad_waste {s.get('pad_waste')}")
     if baseline.get("serving") and not current.get("serving"):
         failures.append("baseline has engine-level serving rows but the "
@@ -75,8 +103,10 @@ def compare(current: dict, baseline: dict, *, min_ratio: float):
     # are runner noise, but the rows must survive AND keep the zero-drop
     # contract: an accepted request is a promise)
     for s in current.get("serving_load", []):
+        p99 = s.get("latency_p99_s")
+        p99_us = "n/a" if p99 is None else f"{p99 * 1e6:.0f}us"
         print(f"serving_load rps={s['rps']:g}: goodput "
-              f"{s['goodput_fps']:.1f} fps, p99 {s.get('latency_p99_s')}s, "
+              f"{s['goodput_fps']:.1f} fps, p99 {p99_us}, "
               f"slo_attainment {s.get('slo_attainment')}, "
               f"rejected {s.get('requests_rejected')}, "
               f"dropped {s.get('requests_dropped')}")
@@ -93,16 +123,17 @@ def compare(current: dict, baseline: dict, *, min_ratio: float):
             f"serving-under-load rows shrank: "
             f"{len(current['serving_load'])} vs committed "
             f"{len(baseline['serving_load'])} arrival rates")
-    geomean = 1.0
-    for r in ratios:
-        geomean *= r
-    geomean **= 1.0 / len(ratios)
-    verdict = "OK" if geomean >= min_ratio else "REGRESSION"
-    print(f"{verdict}: geomean ratio {geomean:.3f} over {len(ratios)} "
-          f"points (floor {min_ratio:.2f})")
-    if geomean < min_ratio:
-        failures.append(
-            f"geomean speedup ratio {geomean:.3f} < {min_ratio:.2f}")
+    if ratios:
+        geomean = 1.0
+        for r in ratios:
+            geomean *= r
+        geomean **= 1.0 / len(ratios)
+        verdict = "OK" if geomean >= min_ratio else "REGRESSION"
+        print(f"{verdict}: geomean ratio {geomean:.3f} over {len(ratios)} "
+              f"points (floor {min_ratio:.2f})")
+        if geomean < min_ratio:
+            failures.append(
+                f"geomean speedup ratio {geomean:.3f} < {min_ratio:.2f}")
     return failures
 
 

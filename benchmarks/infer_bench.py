@@ -43,10 +43,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.spike import num_plane_groups
+from repro.core.spike import num_plane_groups, structured_spikes
 from repro.core.spikformer import SpikformerConfig, init as spik_init
 from repro.infer import (ExecutionPlan, MicroBatchEngine, benchmark_session,
-                         compile as infer_compile)
+                         chunk_occupancy, compile as infer_compile)
+from repro.kernels import ops
+from repro.kernels.lut_matmul import sparse_budget
 from repro.serve import (AsyncServeRuntime, ServePolicy, image_maker,
                          poisson_trace, run_open_loop)
 
@@ -96,6 +98,59 @@ def run_point(params, cfg, *, timesteps: int, weight_dtype: str,
         "activation_traffic_ratio": round(
             4.0 * timesteps / num_plane_groups(timesteps), 2),
     }
+
+
+def _best_time(fn, *, repeats: int) -> float:
+    """Best-of-N wall seconds for one already-jitted call."""
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def run_occupancy_sweep(*, rates=(0.1, 0.2, 0.3), m: int, k: int, n: int,
+                        repeats: int = 5, seed: int = 0) -> list:
+    """Firing-rate sweep: dense byte-LUT vs zero-chunk-skipping gather on
+    one spiking linear, at channel-structured spike rates (~10/20/30% —
+    realistic trained-Spikformer occupancy, not the ~50% of random test
+    weights). The sparse budget is sized the same way a compiled plan
+    would: ``sparse_budget`` over the MEASURED chunk occupancy of the
+    input. Each row carries an exactness flag — a fast wrong gather is
+    worthless — and ``compare_bench.py`` gates the rows non-lossy.
+    """
+    t = 8
+    key = jax.random.PRNGKey(seed + 7)
+    kw_key, *rate_keys = jax.random.split(key, len(rates) + 1)
+    w = jax.random.normal(kw_key, (k, n), jnp.float32)
+    rows = []
+    for rate, rk in zip(rates, rate_keys):
+        x = structured_spikes(rk, t=t, shape=(m, k), rate=rate)
+        occ = chunk_occupancy(x, t)
+        c = -(-k // 8)
+        budget = sparse_budget(c, occ)
+        dense = jax.jit(lambda xx: ops.spike_linear(xx, w, None, t=t,
+                                                    route="lut"))
+        sparse = jax.jit(lambda xx: ops.spike_linear(xx, w, None, t=t,
+                                                     route="lut_sparse",
+                                                     occupancy=occ))
+        d_out, s_out = dense(x), sparse(x)
+        exact = bool((np.asarray(d_out) == np.asarray(s_out)).all())
+        dense_s = _best_time(lambda: dense(x), repeats=repeats)
+        sparse_s = _best_time(lambda: sparse(x), repeats=repeats)
+        rows.append({
+            "firing_rate": rate,
+            "chunk_occupancy": round(occ, 4),
+            "chunks": c,
+            "max_chunks": budget,
+            "m": m, "k": k, "n": n, "timesteps": t,
+            "exact": exact,
+            "dense_s": round(dense_s, 6),
+            "sparse_s": round(sparse_s, 6),
+            "sparse_speedup": round(dense_s / sparse_s, 3),
+        })
+    return rows
 
 
 def serving_models(params, cfg, *, buckets):
@@ -181,7 +236,32 @@ def run(*, batch_size: int = 8, batches: int = 4, repeats: int = 3,
         load_point=(4, "float32"),
         load_rates=(64.0, 256.0),
         load_duration_s: float = 2.0,
-        load_slo_ms: float = 100.0) -> dict:
+        load_slo_ms: float = 100.0,
+        occupancy_rates=(0.1, 0.2, 0.3),
+        occupancy_shape=(512, 256, 256),
+        occupancy_repeats: int = 5,
+        occupancy_only: bool = False) -> dict:
+    om, ok, on = occupancy_shape
+    occupancy_sweep = run_occupancy_sweep(
+        rates=occupancy_rates, m=om, k=ok, n=on,
+        repeats=occupancy_repeats, seed=seed)
+    occ_exact = all(r["exact"] for r in occupancy_sweep)
+
+    if occupancy_only:
+        # the fast-CI shape of the record: just the kernel-level sparsity
+        # rows and their exactness gate, no model compiles
+        return {
+            "bench": "infer_spikformer",
+            "mode": mode,
+            "backend_platform": jax.default_backend(),
+            "machine": platform.machine(),
+            "config": {"occupancy_shape": list(occupancy_shape),
+                       "occupancy_rates": list(occupancy_rates)},
+            "bit_exact": occ_exact,
+            "occupancy_sweep": occupancy_sweep,
+            "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
+        }
+
     cfg = SpikformerConfig().scaled(img_size=img_size, dim=dim, depth=depth)
     params = spik_init(jax.random.PRNGKey(seed), cfg)
 
@@ -213,13 +293,16 @@ def run(*, batch_size: int = 8, batches: int = 4, repeats: int = 3,
         "config": {"img_size": cfg.img_size, "dim": cfg.dim,
                    "depth": cfg.depth, "heads": cfg.heads,
                    "timesteps": base["timesteps"], "batch_size": batch_size,
-                   "batches": batches},
-        "bit_exact": all(p["bit_exact"] for p in points),
+                   "batches": batches,
+                   "occupancy_shape": list(occupancy_shape),
+                   "occupancy_rates": list(occupancy_rates)},
+        "bit_exact": all(p["bit_exact"] for p in points) and occ_exact,
         "packed": base["packed"],
         "reference": base["reference"],
         "packed_speedup": base["packed_speedup"],
         "activation_traffic_ratio": base["activation_traffic_ratio"],
         "sweep": points,
+        "occupancy_sweep": occupancy_sweep,
         "serving": serving,
         "serving_load": serving_load,
         "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
@@ -259,6 +342,10 @@ def main(argv=None):
     ap.add_argument("--smoke", action="store_true",
                     help="tiny config — CI gate that the sweep runs and "
                          "stays bit-exact, plus a coarse speedup ratio")
+    ap.add_argument("--occupancy-only", action="store_true",
+                    help="run ONLY the firing-rate sweep (dense vs "
+                         "zero-chunk-skipping LUT) — the fast-CI sparsity "
+                         "gate; no model compiles")
     ap.add_argument("--out", nargs="?", const=str(DEFAULT_OUT), default=None,
                     help="append the record to this JSON trajectory file "
                          f"(bare --out means {DEFAULT_OUT.name} at the "
@@ -269,18 +356,24 @@ def main(argv=None):
     # dispatch and its speedup ratio is pure noise, useless even with a
     # loose comparison tolerance
     small = (2, 4) if args.smoke else (8, 4)
+    mode = "smoke" if args.smoke else "full"
+    if args.occupancy_only:
+        mode = "occupancy_smoke" if args.smoke else "occupancy"
     kw = dict(batch_size=small[0] if args.batch_size is None
               else args.batch_size,
               batches=small[1] if args.batches is None else args.batches,
-              repeats=args.repeats, seed=args.seed,
-              mode="smoke" if args.smoke else "full")
+              repeats=args.repeats, seed=args.seed, mode=mode,
+              occupancy_only=args.occupancy_only)
     if args.smoke:
         kw.update(img_size=16, dim=32, depth=1, serving_requests=6,
                   serving_sweep=((4, "float32"),),
                   # still two arrival rates: the acceptance contract is
                   # serving-under-load rows at >= 2 rates, smoke included
                   load_rates=(40.0, 120.0), load_duration_s=0.75,
-                  load_slo_ms=150.0)
+                  load_slo_ms=150.0,
+                  # smaller single-layer shape, but the SAME 10/20/30%
+                  # rates — the sparse-beats-dense gate holds in smoke too
+                  occupancy_shape=(256, 256, 128), occupancy_repeats=3)
 
     record = run(**kw)
     print(json.dumps(record))

@@ -24,6 +24,7 @@ stays bit-exact, so a bad fit costs throughput, never correctness.
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import json
 import time
 
@@ -31,6 +32,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import spike
 from repro.kernels import ops
 from repro.kernels import lut_matmul as lut
 from repro.kernels.lut_matmul import RouteConstants
@@ -88,6 +90,51 @@ def measure_grid(grid=GRID, *, repeats: int = 3, seed: int = 0) -> list:
         s = measure_point(m, k, n, g, repeats=repeats, seed=seed)
         print(json.dumps(s))
         samples.append(s)
+    return samples
+
+
+def measure_sparse_point(m: int, k: int, n: int, g: int, rate: float, *,
+                         repeats: int = 3, seed: int = 0) -> dict | None:
+    """Time the dense LUT route against the zero-chunk-skipping route on
+    channel-structured spikes at firing rate ``rate``. Returns None when
+    the measured chunk occupancy leaves no budget headroom (sparse route
+    would just be the dense gather)."""
+    t = 8 * g
+    key = jax.random.PRNGKey(seed + 1000)
+    x = spike.structured_spikes(key, t=t, shape=(m, k), rate=rate)
+    w = jax.random.normal(jax.random.fold_in(key, 1), (k, n), jnp.float32)
+    table = lut.build_lut(w)
+    c = lut.num_k_chunks(k)
+    occ = float(jnp.mean(lut.plane_indices(x)[:t] != 0))
+    budget = lut.sparse_budget(c, occ)
+    if budget >= c:
+        return None
+    dense = jax.jit(lambda xx: ops.spike_linear(xx, w, t=t, pallas=False,
+                                                route="lut", table=table))
+    sparse = jax.jit(lambda xx: ops.spike_linear(
+        xx, w, t=t, pallas=False, route="lut_sparse", table=table,
+        occupancy=occ))
+    return {
+        "m": m, "k": k, "n": n, "g": g, "t": t, "c": c,
+        "rate": rate, "occupancy": round(occ, 4), "budget": budget,
+        "table_bytes": lut.table_bytes(k, n, False),
+        "lut_s": time_call(dense, x, repeats=repeats),
+        "sparse_s": time_call(sparse, x, repeats=repeats),
+    }
+
+
+def measure_sparse_grid(grid=GRID, rates=(0.1, 0.2, 0.3), *,
+                        repeats: int = 3, seed: int = 0) -> list:
+    samples = []
+    for m, k, n, g in grid:
+        if k % 8:                      # structured spikes need whole chunks
+            continue
+        for rate in rates:
+            s = measure_sparse_point(m, k, n, g, rate,
+                                     repeats=repeats, seed=seed)
+            if s is not None:
+                print(json.dumps(s))
+                samples.append(s)
     return samples
 
 
@@ -153,12 +200,55 @@ def fit_constants(samples: list, *,
     )
 
 
+def fit_compact_cost(samples: list, sparse_samples: list, *,
+                     base: RouteConstants) -> RouteConstants:
+    """Fit the sparse route's per-(index byte x slot) compaction cost from
+    measured sparse timings, reusing the dense/unpack fit for everything
+    else.
+
+    sparse_s ~ alpha * [t*m*budget*n*gather_cost*cache_penalty
+                        + g*m*k*transpose_cost + t*m*c*budget*compact_cost]
+    — every term but the last is pinned by ``base`` (the constants just
+    fitted from the dense grid), so the residual over the compaction
+    volume is a one-coefficient least squares. Falls back to ``base``
+    whenever the samples cannot identify a positive cost.
+    """
+    sm = [s for s in samples if s["unpack_s"] > 0 and s["lut_s"] > 0]
+    if len(sparse_samples) < 2 or len(sm) < 3:
+        return base
+    # re-derive the FMA unit (seconds per dot FMA) exactly as fit_constants
+    fma = np.array([s["t"] * s["m"] * s["k"] * s["n"] for s in sm], float)
+    wr = np.array([s["t"] * s["m"] * s["k"] for s in sm], float)
+    uy = np.array([s["unpack_s"] for s in sm], float)
+    alpha, _ = _lstsq(np.stack([fma, wr], 1), uy)
+    if not np.isfinite(alpha) or alpha <= 0:
+        return base
+    resid, vol = [], []
+    for s in sparse_samples:
+        pen = (1.0 if s["table_bytes"] <= base.cache_bytes
+               else base.cache_penalty)
+        gather = (s["t"] * s["m"] * s["budget"] * s["n"]
+                  * base.gather_cost * pen)
+        transpose = s["g"] * s["m"] * s["k"] * base.transpose_cost
+        resid.append(s["sparse_s"] / alpha - gather - transpose)
+        vol.append(s["t"] * s["m"] * s["c"] * s["budget"])
+    compact, = _lstsq(np.array(vol, float)[:, None], np.array(resid, float))
+    if not np.isfinite(compact) or compact <= 0:
+        return base
+    return dataclasses.replace(
+        base, compact_cost=float(np.clip(compact, 1.0, 256.0)))
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--fast", action="store_true",
                     help="half the grid, one repeat (CI/smoke)")
     ap.add_argument("--repeats", type=int, default=None)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--firing-rates", default=None,
+                    help="comma-separated firing rates (e.g. 0.1,0.2,0.3): "
+                         "also measure the zero-chunk-skipping route on "
+                         "structured spikes and fit compact_cost")
     ap.add_argument("--out", default=None,
                     help="write the ExecutionPlan JSON fragment here "
                          "(stdout always gets it)")
@@ -168,6 +258,12 @@ def main(argv=None):
     repeats = args.repeats or (1 if args.fast else 3)
     samples = measure_grid(grid, repeats=repeats, seed=args.seed)
     constants = fit_constants(samples)
+    sparse_samples = []
+    if args.firing_rates:
+        rates = tuple(float(r) for r in args.firing_rates.split(","))
+        sparse_samples = measure_sparse_grid(grid, rates, repeats=repeats,
+                                             seed=args.seed)
+        constants = fit_compact_cost(samples, sparse_samples, base=constants)
 
     # the committable artifact: a fragment ExecutionPlan.from_json accepts
     fragment = {"route_constants": constants.to_dict()}
@@ -182,8 +278,17 @@ def main(argv=None):
         (ops.choose_route(m=s["m"], k=s["k"], n=s["n"], g=s["g"], t=s["t"],
                           constants=constants) == "lut")
         == (s["lut_s"] < s["unpack_s"]) for s in samples)
-    print(json.dumps({"grid_points": len(samples),
-                      "tuned_agreement": f"{agree}/{len(samples)}"}))
+    summary = {"grid_points": len(samples),
+               "tuned_agreement": f"{agree}/{len(samples)}"}
+    if sparse_samples:
+        sagree = sum(
+            (ops.choose_route(m=s["m"], k=s["k"], n=s["n"], g=s["g"],
+                              t=s["t"], constants=constants,
+                              occupancy=s["occupancy"]) == "lut_sparse")
+            == (s["sparse_s"] < s["lut_s"]) for s in sparse_samples)
+        summary["sparse_points"] = len(sparse_samples)
+        summary["sparse_agreement"] = f"{sagree}/{len(sparse_samples)}"
+    print(json.dumps(summary))
     return constants
 
 

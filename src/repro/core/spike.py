@@ -87,6 +87,46 @@ def bitplanes_u8(x, *, dtype=jnp.float32):
     return planes.astype(dtype)
 
 
+def structured_spikes(key, *, t: int, shape: tuple, rate: float,
+                      chunk: int = 8, group_rate: float = 0.9):
+    """Random packed spikes at overall firing rate ``rate`` with
+    CHANNEL-STRUCTURED sparsity: an exact count of ``chunk``-aligned
+    channel groups is active (shared across rows and timesteps) and only
+    those fire, each active channel at ``group_rate``. Returns
+    ``(G, *shape)`` uint8 plane groups via ``pack_timesteps``.
+
+    Why not iid bits: at iid rate p, a K-chunk of 8 channels is all-zero
+    with probability ``(1-p)^8`` (~6% at p=0.3) — nearly nothing for a
+    zero-chunk skipper to skip. Trained SNNs are not iid: whole channels
+    go quiet together while the surviving ones fire often (the layer-wise
+    sparsity structure sparse-accelerator papers exploit), which
+    concentrates the zeros into skippable chunks. Here the active-group
+    fraction is ``rate / group_rate``, so the resulting CHUNK occupancy
+    (what the sparse route's budget is sized from) tracks the firing rate
+    ~1:1 instead of doubling it; the active-group count is exact, not a
+    Bernoulli draw, so the occupancy a benchmark measures is the one it
+    asked for.
+
+    The last axis of ``shape`` is the channel axis and must be a multiple
+    of ``chunk``; ``rate`` must not exceed ``group_rate``.
+    """
+    assert 0.0 <= rate <= group_rate <= 1.0, (rate, group_rate)
+    *lead, channels = shape
+    assert channels % chunk == 0, (channels, chunk)
+    if rate == 0.0:
+        return jnp.zeros((num_plane_groups(t), *shape), jnp.uint8)
+    kg, kb = jax.random.split(key)
+    groups = channels // chunk
+    n_active = max(1, round(rate / group_rate * groups))
+    active = jnp.zeros(groups, bool).at[
+        jax.random.permutation(kg, groups)[:n_active]].set(True)
+    active = jnp.repeat(active, chunk)            # (channels,) group mask
+    # in-group rate chosen so the overall rate stays ``rate`` after masking
+    bits = jax.random.bernoulli(kb, min(1.0, rate * groups / n_active),
+                                (t, *lead, channels))
+    return pack_timesteps((bits & active).astype(jnp.uint8))
+
+
 def rate_decode(spikes, axis: int = 0):
     """Spike train -> rate (mean over timesteps); classification readout."""
     return spikes.astype(jnp.float32).mean(axis=axis)

@@ -204,7 +204,8 @@ def fold_inference_params(params, cfg: SpikformerConfig):
     return out
 
 
-def forward_folded(folded, images_u8, cfg: SpikformerConfig, *, backend):
+def forward_folded(folded, images_u8, cfg: SpikformerConfig, *, backend,
+                   layer_occupancy=None):
     """The inference forward over BN-folded params through a pluggable
     execution backend — the graph VESTA executes: matmuls + LIF comparisons
     only, with every activation between layers a binary spike train.
@@ -219,37 +220,52 @@ def forward_folded(folded, images_u8, cfg: SpikformerConfig, *, backend):
     (the route-planning pass's cached byte-LUT tables,
     ``infer.compile.plan_route_tables``):
     the packed backend then runs the unpack-free gather route and the float
-    backend its fold-order emulation, keeping the pair bit-exact. Returns
-    (B, num_classes) logits.
+    backend its fold-order emulation, keeping the pair bit-exact.
+
+    ``layer_occupancy`` maps layer paths ("scs/conv0", "blocks/b0/ssa/wq",
+    ...) to STATIC calibrated chunk-occupancy floats for layers the plan
+    routed "lut_sparse". It is closed over, never part of the traced tree
+    — the sparse gather budget must be a compile-time constant. The kwarg
+    is forwarded to a backend method only for layers that carry a value,
+    so backends without the ``occupancy`` parameter keep working under
+    dense plans. Returns (B, num_classes) logits.
     """
     t = cfg.timesteps
+    occ = layer_occupancy or {}
 
-    def wssl(z, layer):
+    def extra(path):
+        o = occ.get(path)
+        return {} if o is None else {"occupancy": o}
+
+    def wssl(z, layer, path):
         return backend.wssl_lif(z, layer["kernel"], layer["bias"], t=t,
                                 scale=layer.get("scale"),
-                                lut=layer.get("lut"))
+                                lut=layer.get("lut"), **extra(path))
 
     c0 = folded["scs"]["conv0"]
     x = backend.sssc_lif(images_u8, c0["kernel"], c0["bias"], t=t,
-                         scale=c0.get("scale"), lut=c0.get("lut"))
+                         scale=c0.get("scale"), lut=c0.get("lut"),
+                         **extra("scs/conv0"))
     for i in range(1, len(cfg.scs_channels)):
         ci = folded["scs"][f"conv{i}"]
         x = backend.zsc_lif(x, ci["kernel"], ci["bias"], t=t,
-                            scale=ci.get("scale"), lut=ci.get("lut"))
+                            scale=ci.get("scale"), lut=ci.get("lut"),
+                            **extra(f"scs/conv{i}"))
     x = backend.to_tokens(x)
 
     for i in range(cfg.depth):
         blk = folded["blocks"][f"b{i}"]
         ssa, mlp = blk["ssa"], blk["mlp"]
-        q = wssl(x, ssa["wq"])
-        k = wssl(x, ssa["wk"])
-        v = wssl(x, ssa["wv"])
+        bp = f"blocks/b{i}"
+        q = wssl(x, ssa["wq"], f"{bp}/ssa/wq")
+        k = wssl(x, ssa["wk"], f"{bp}/ssa/wk")
+        v = wssl(x, ssa["wv"], f"{bp}/ssa/wv")
         att = backend.stdp_lif(q, k, v, heads=cfg.heads,
                                scale=cfg.attn_scale, t=t)
-        att = wssl(att, ssa["wo"])
+        att = wssl(att, ssa["wo"], f"{bp}/ssa/wo")
         x = backend.residual(att, x, cfg.residual)
-        s1 = wssl(x, mlp["fc1"])
-        s2 = wssl(s1, mlp["fc2"])
+        s1 = wssl(x, mlp["fc1"], f"{bp}/mlp/fc1")
+        s2 = wssl(s1, mlp["fc2"], f"{bp}/mlp/fc2")
         x = backend.residual(s2, x, cfg.residual)
 
     rate = backend.rate(x, t=t)                         # (B, D)

@@ -2,11 +2,14 @@
 reference to VESTA's unified-PE datapath, behind a compile/serve split —
 ``compile(params, cfg, plan)`` lowers to a ``CompiledModel``,
 ``MicroBatchEngine`` serves it. See README.md in this directory."""
-from .backends import FloatBackend, PackedBackend, get_backend
-from .compile import (CompiledModel, ExecutionPlan, compile, fold_bn,
-                      lower, plan_route_tables, quantize_weights,
-                      strip_lut_annotations)
-from .engine import PAPER_FPS, MicroBatchEngine, Request
+from .backends import (FloatBackend, OccupancyRecorder, PackedBackend,
+                       chunk_occupancy, get_backend, spike_occupancy,
+                       value_chunk_occupancy)
+from .compile import (CompiledModel, ExecutionPlan,
+                      calibrate_layer_occupancy, compile, fold_bn,
+                      linear_layer_paths, lower, plan_route_tables,
+                      quantize_weights, strip_lut_annotations)
+from .engine import PAPER_FPS, MicroBatchEngine, Request, batch_occupancy
 from .quant import quantize_folded, quantize_layer
 from .registry import (BackendSpec, backend_spec, list_backends,
                        register_backend, unregister_backend)
@@ -17,10 +20,12 @@ __all__ = [
     "ExecutionPlan", "CompiledModel", "compile",
     "fold_bn", "quantize_weights", "plan_route_tables", "lower",
     "strip_lut_annotations",
+    "calibrate_layer_occupancy", "linear_layer_paths",
     # serve half
-    "MicroBatchEngine", "Request", "PAPER_FPS",
+    "MicroBatchEngine", "Request", "PAPER_FPS", "batch_occupancy",
     # backends + registry
-    "FloatBackend", "PackedBackend", "get_backend",
+    "FloatBackend", "PackedBackend", "OccupancyRecorder", "get_backend",
+    "spike_occupancy", "chunk_occupancy", "value_chunk_occupancy",
     "BackendSpec", "register_backend", "unregister_backend",
     "backend_spec", "list_backends",
     # quantization

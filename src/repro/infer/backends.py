@@ -51,6 +51,38 @@ from ..kernels import ops
 from ..kernels import lut_matmul as lut
 
 
+# ---------------------------------------------------------------------------
+# Packed-popcount occupancy readouts. These live next to PackedBackend.rate
+# (the popcount classification readout) because they are the same trick
+# pointed at telemetry: sparsity statistics read straight off the packed
+# bytes, no unpacking. All three return plain python floats — they are
+# calibration/telemetry utilities, not jittable graph ops.
+# ---------------------------------------------------------------------------
+
+def spike_occupancy(x_packed, t: int) -> float:
+    """Firing rate of a packed spike tensor: fraction of set bits over the
+    ``t`` live planes. Bits past t-1 are zero by the packing invariant, so
+    a plain popcount over all bytes divided by live positions is exact."""
+    counts = int(lax.population_count(x_packed).astype(jnp.int32).sum())
+    neurons = x_packed.size // x_packed.shape[0]
+    return counts / float(t * neurons) if neurons else 0.0
+
+
+def chunk_occupancy(x_packed, t: int) -> float:
+    """CHUNK occupancy of a packed spike tensor: the fraction of nonzero
+    per-plane chunk-index bytes — exactly the quantity the zero-chunk-
+    skipping gather scales with (a zero byte = one skippable 8-row gather),
+    and what ``choose_route``/``sparse_budget`` take as ``occupancy``."""
+    idx = lut.plane_indices(x_packed)[:t]
+    return float(jnp.mean((idx != 0).astype(jnp.float32)))
+
+
+def value_chunk_occupancy(x_u8) -> float:
+    """Chunk occupancy of uint8 *value* bytes (the SSSC operand): the
+    8 bit-planes of the values are the LUT index source directly."""
+    return chunk_occupancy(x_u8[None], 8)
+
+
 class FloatBackend:
     """Reference backend: float spike trains through ``core.unified``."""
 
@@ -100,20 +132,27 @@ class FloatBackend:
             y = y + bias.astype(y.dtype)
         return y.reshape((*lead, kernel.shape[-1]))
 
+    # ``occupancy`` (the sparse-route calibration) is accepted and IGNORED:
+    # the zero-chunk-skipping gather only drops exact-zero identity entries
+    # from the fold, so its bit-exact float emulation is the same
+    # ``lut_matmul_planes`` replay the dense LUT route already uses.
+
     def sssc_lif(self, images_u8, kernel, bias, *, t: int, scale=None,
-                 lut=None):
+                 lut=None, occupancy=None):
         op = unified.sssc if lut is None else self._sssc_emu
         y, vth = self._acc_and_vth(op, images_u8, kernel, bias,
                                    scale)                # (B, H/2, W/2, F)
         y = jnp.broadcast_to(y[None], (t, *y.shape))    # image constant in T
         return tflif(y, v_th=vth)
 
-    def zsc_lif(self, x, kernel, bias, *, t: int, scale=None, lut=None):
+    def zsc_lif(self, x, kernel, bias, *, t: int, scale=None, lut=None,
+                occupancy=None):
         op = unified.zsc if lut is None else self._zsc_emu
         y, vth = self._acc_and_vth(op, x, kernel, bias, scale)
         return tflif(y, v_th=vth)
 
-    def wssl_lif(self, x, kernel, bias, *, t: int, scale=None, lut=None):
+    def wssl_lif(self, x, kernel, bias, *, t: int, scale=None, lut=None,
+                 occupancy=None):
         op = unified.wssl if lut is None else self._wssl_emu
         y, vth = self._acc_and_vth(op, x, kernel, bias, scale)
         return tflif(y, v_th=vth)
@@ -176,22 +215,31 @@ class PackedBackend:
         """How an int8 kernel enters the packed matmul (single spot)."""
         return kernel if scale is None else kernel.astype(jnp.float32)
 
+    # ``occupancy`` is the plan's static per-layer chunk-occupancy
+    # calibration (present only for "lut_sparse"-routed layers); the ops
+    # layer derives the zero-chunk-skipping gather budget from it.
+
     def sssc_lif(self, images_u8, kernel, bias, *, t: int, scale=None,
-                 lut=None):
+                 lut=None, occupancy=None):
         x = space_to_depth(images_u8, 2)                # (B,H/2,W/2,4C) u8
         acc = ops.sssc_linear(x, self._w(kernel, scale), None,
-                              pallas=self.pallas, table=lut)
+                              pallas=self.pallas, table=lut,
+                              occupancy=occupancy)
         acc = jnp.broadcast_to(acc[None], (t, *acc.shape))
         return self._lif(acc, bias, scale)              # (G,B,H/2,W/2,F) u8
 
-    def zsc_lif(self, x, kernel, bias, *, t: int, scale=None, lut=None):
+    def zsc_lif(self, x, kernel, bias, *, t: int, scale=None, lut=None,
+                occupancy=None):
         acc = ops.spike_linear(space_to_depth(x, 2), self._w(kernel, scale),
-                               None, t=t, pallas=self.pallas, table=lut)
+                               None, t=t, pallas=self.pallas, table=lut,
+                               occupancy=occupancy)
         return self._lif(acc, bias, scale)
 
-    def wssl_lif(self, x, kernel, bias, *, t: int, scale=None, lut=None):
+    def wssl_lif(self, x, kernel, bias, *, t: int, scale=None, lut=None,
+                 occupancy=None):
         acc = ops.spike_linear(x, self._w(kernel, scale), None, t=t,
-                               pallas=self.pallas, table=lut)
+                               pallas=self.pallas, table=lut,
+                               occupancy=occupancy)
         return self._lif(acc, bias, scale)
 
     def stdp_lif(self, q, k, v, *, heads: int, scale: float, t: int):
@@ -232,6 +280,39 @@ class PackedBackend:
         counts = lax.population_count(x).astype(jnp.int32).sum(axis=0)
         rate = counts.astype(jnp.float32) / jnp.float32(t)
         return rate.mean(axis=1)
+
+
+class OccupancyRecorder(PackedBackend):
+    """A ``PackedBackend`` that records the chunk occupancy of every linear
+    layer's packed matmul operand, in forward call order.
+
+    ``infer.compile.calibrate_layer_occupancy`` runs one UN-JITTED forward
+    through this backend (each readout concretizes to a python float, which
+    a trace cannot do) and zips ``trace`` with the layer paths in the same
+    deterministic order ``forward_folded`` visits them. The measured
+    quantity is exactly what ``choose_route``/``sparse_budget`` consume:
+    the fraction of nonzero chunk-index bytes the gather would visit.
+    """
+
+    def __init__(self):
+        super().__init__(pallas=False)
+        self.trace: list[float] = []
+
+    def sssc_lif(self, images_u8, kernel, bias, *, t: int, scale=None,
+                 lut=None, occupancy=None):
+        self.trace.append(value_chunk_occupancy(space_to_depth(images_u8, 2)))
+        return super().sssc_lif(images_u8, kernel, bias, t=t, scale=scale,
+                                lut=lut)
+
+    def zsc_lif(self, x, kernel, bias, *, t: int, scale=None, lut=None,
+                occupancy=None):
+        self.trace.append(chunk_occupancy(space_to_depth(x, 2), t))
+        return super().zsc_lif(x, kernel, bias, t=t, scale=scale, lut=lut)
+
+    def wssl_lif(self, x, kernel, bias, *, t: int, scale=None, lut=None,
+                 occupancy=None):
+        self.trace.append(chunk_occupancy(x, t))
+        return super().wssl_lif(x, kernel, bias, t=t, scale=scale, lut=lut)
 
 
 # ---------------------------------------------------------------------------

@@ -57,10 +57,18 @@ class ExecutionPlan:
     per-image math is row-independent, which is what keeps logits identical
     across buckets (the multi-bucket parity contract).
 
-    ``routes`` is the resolved per-layer plan (path -> "lut" | "unpack").
-    ``None`` means "decide at compile time via ``route_constants``"; a
-    non-None mapping PINS the decisions — that is what a deserialized plan
-    carries, so a committed plan is replayed, not re-derived.
+    ``routes`` is the resolved per-layer plan (path -> "lut" |
+    "lut_sparse" | "unpack"). ``None`` means "decide at compile time via
+    ``route_constants``"; a non-None mapping PINS the decisions — that is
+    what a deserialized plan carries, so a committed plan is replayed, not
+    re-derived.
+
+    ``layer_occupancy`` maps layer paths to calibrated chunk-occupancy
+    floats (fraction of nonzero chunk-index bytes at that layer's input,
+    from ``calibrate_layer_occupancy``). It is what lets ``choose_route``
+    consider the sparse gather route, and what sizes the static gather
+    budget at lowering time — sparsity claims are measured and committed
+    with the plan, never assumed.
     """
     backend: str = "packed"
     weight_dtype: str | None = None     # None: whatever the tree carries
@@ -70,6 +78,7 @@ class ExecutionPlan:
     route_constants: RouteConstants = dataclasses.field(
         default_factory=RouteConstants)
     routes: dict | None = None          # resolved: layer path -> route
+    layer_occupancy: dict | None = None  # path -> calibrated chunk occupancy
     backend_options: dict = dataclasses.field(default_factory=dict)
 
     def __post_init__(self):
@@ -88,6 +97,16 @@ class ExecutionPlan:
         if isinstance(self.route_constants, dict):
             object.__setattr__(self, "route_constants",
                                RouteConstants.from_dict(self.route_constants))
+        if self.layer_occupancy is not None:
+            occ = {}
+            for path, o in self.layer_occupancy.items():
+                o = float(o)
+                if not 0.0 <= o <= 1.0:
+                    raise ValueError(
+                        f"layer_occupancy[{path!r}] = {o!r}; occupancy is a "
+                        "fraction of nonzero chunk bytes in [0, 1]")
+                occ[str(path)] = o
+            object.__setattr__(self, "layer_occupancy", occ)
 
     @property
     def plan_batch(self) -> int:
@@ -164,7 +183,8 @@ def plan_route_tables(folded, cfg: SpikformerConfig, *, batch_size: int,
                       max_table_bytes: int = lut_matmul.MAX_TABLE_BYTES,
                       build_tables: bool = True,
                       constants: RouteConstants | None = None,
-                      routes: dict | None = None):
+                      routes: dict | None = None,
+                      layer_occupancy: dict | None = None):
     """Pass 3 — per-layer matmul route planning: the byte-LUT's precompute.
 
     For every folded layer this computes the packed-route matmul shape
@@ -184,6 +204,14 @@ def plan_route_tables(folded, cfg: SpikformerConfig, *, batch_size: int,
     ``compile()`` uses for backends whose capability says no tables)
     annotates LUT layers with a cheap boolean flag instead.
 
+    ``layer_occupancy`` (path -> calibrated chunk occupancy) lets
+    ``choose_route`` weigh the zero-chunk-skipping gather route; a layer
+    with no calibrated value never routes "lut_sparse" — the sparse budget
+    is sized from the measurement, so an unmeasured layer has nothing to
+    size it with. The same rule holds for pinned plans: replaying a
+    "lut_sparse" pin without the occupancy that produced it is an error,
+    not a silent densification.
+
     Returns ``(annotated_tree, plan)`` with ``plan`` mapping layer paths
     to routes.
     """
@@ -191,6 +219,7 @@ def plan_route_tables(folded, cfg: SpikformerConfig, *, batch_size: int,
     g = -(-t // 8)
     m_tok = batch_size * cfg.tokens
     plan = {}
+    occ_map = layer_occupancy or {}
 
     def shapes_for(path):
         """Packed-route matmul shape (m, live planes, groups) at ``path``."""
@@ -210,7 +239,8 @@ def plan_route_tables(folded, cfg: SpikformerConfig, *, batch_size: int,
                                  weights_are_int=jnp.issubdtype(
                                      wq.dtype, jnp.integer),
                                  max_table_bytes=max_table_bytes,
-                                 constants=constants)
+                                 constants=constants,
+                                 occupancy=occ_map.get(path))
         else:
             try:
                 route = routes[path]
@@ -218,14 +248,19 @@ def plan_route_tables(folded, cfg: SpikformerConfig, *, batch_size: int,
                 raise ValueError(
                     f"pinned route plan has no entry for layer {path!r} — "
                     "the plan was built for a different config") from None
-            if route not in ("lut", "unpack"):
+            if route not in ("lut", "lut_sparse", "unpack"):
                 raise ValueError(f"pinned route {route!r} for {path!r}; "
-                                 "expected 'lut' or 'unpack'")
+                                 "expected 'lut', 'lut_sparse' or 'unpack'")
+        if route == "lut_sparse" and occ_map.get(path) is None:
+            raise ValueError(
+                f"route 'lut_sparse' for {path!r} requires a calibrated "
+                "occupancy in the plan's layer_occupancy — the static "
+                "gather budget is sized from it")
         plan[path] = route
         # drop any stale annotation first — re-planning an annotated tree
         # must not leave a previous plan's "lut" leaf on an unpack layer
         layer = {k2: v for k2, v in layer.items() if k2 != "lut"}
-        if route == "lut":
+        if route in ("lut", "lut_sparse"):
             layer["lut"] = (lut_matmul.build_lut(wq) if build_tables
                             else True)
         return layer
@@ -241,13 +276,62 @@ def strip_lut_annotations(folded):
         folded, lambda _, l: {k: v for k, v in l.items() if k != "lut"})
 
 
-def lower(folded, cfg: SpikformerConfig, backend, *, jit: bool = True):
+def linear_layer_paths(cfg: SpikformerConfig) -> list:
+    """Layer paths in FORWARD-CALL order — the order a single
+    ``forward_folded`` pass hits each spiking linear, which is the order
+    ``backends.OccupancyRecorder`` appends its trace in. (``map_folded_layers``
+    walks the same paths but in tree order; calibration needs call order.)"""
+    paths = [f"scs/conv{i}" for i in range(len(cfg.scs_channels))]
+    for i in range(cfg.depth):
+        paths += [f"blocks/b{i}/ssa/{w}" for w in ("wq", "wk", "wv", "wo")]
+        paths += [f"blocks/b{i}/mlp/fc1", f"blocks/b{i}/mlp/fc2"]
+    return paths
+
+
+def calibrate_layer_occupancy(params, cfg: SpikformerConfig, images_u8, *,
+                              folded: bool = False,
+                              weight_dtype: str | None = None) -> dict:
+    """Measure per-layer chunk occupancy on a calibration batch.
+
+    Runs ONE un-jitted forward through ``backends.OccupancyRecorder`` (a
+    packed backend that notes, before each spiking linear, the fraction of
+    nonzero chunk-index bytes in its input) and zips the trace with
+    ``linear_layer_paths``. The result is the ``layer_occupancy`` mapping
+    an ``ExecutionPlan`` commits — measured on real data, JSON-serializable,
+    replayable.
+
+    The calibration forward runs the plain dense routes (the recorder
+    delegates without occupancy), so calibration never depends on the
+    decisions it is about to inform.
+    """
+    tree = fold_bn(params, cfg, folded=folded)
+    tree, _ = quantize_weights(tree, weight_dtype)
+    recorder = _backends.OccupancyRecorder()
+    fwd = lower(tree, cfg, recorder, jit=False)
+    fwd(tree, jnp.asarray(images_u8, jnp.uint8))
+    paths = linear_layer_paths(cfg)
+    if len(recorder.trace) != len(paths):
+        raise RuntimeError(
+            f"occupancy trace has {len(recorder.trace)} entries but the "
+            f"config has {len(paths)} spiking linears — recorder and "
+            "forward_folded disagree about the layer sequence")
+    return dict(zip(paths, recorder.trace))
+
+
+def lower(folded, cfg: SpikformerConfig, backend, *, jit: bool = True,
+          layer_occupancy: dict | None = None):
     """Pass 4 — lowering: the annotated tree becomes one step callable
     (jitted unless ``jit=False``; each batch bucket compiles its own
-    fixed-shape executable under it on first use / warmup)."""
+    fixed-shape executable under it on first use / warmup).
+
+    ``layer_occupancy`` (path -> static occupancy float, for layers routed
+    "lut_sparse") is CLOSED OVER, not threaded through the traced tree —
+    the sparse gather budget must be a trace-time constant, and the folded
+    tree is a jit argument whose leaves become tracers."""
     def fwd(folded_tree, images):
         return spikformer.forward_folded(folded_tree, images, cfg,
-                                         backend=backend)
+                                         backend=backend,
+                                         layer_occupancy=layer_occupancy)
 
     return jax.jit(fwd) if jit else fwd
 
@@ -425,15 +509,23 @@ def compile(params, cfg: SpikformerConfig, plan: ExecutionPlan | None = None,
             tree, cfg, batch_size=plan.plan_batch,
             max_table_bytes=plan.max_table_bytes,
             build_tables=registry.wants_lut_tables(plan.backend, backend),
-            constants=plan.route_constants, routes=plan.routes)
+            constants=plan.route_constants, routes=plan.routes,
+            layer_occupancy=plan.layer_occupancy)
     else:
         # the pin must hold even for a pre-annotated folded tree: stale
         # "lut" leaves would silently keep the LUT route alive
         tree = strip_lut_annotations(tree)
         routes = {}
 
+    # static per-path occupancy, only for layers the plan routed sparse —
+    # closed over at lowering, never a leaf of the traced tree
+    occ_all = plan.layer_occupancy or {}
+    sparse_occ = {p: occ_all[p]
+                  for p, r in routes.items() if r == "lut_sparse"} or None
+
     resolved = dataclasses.replace(plan, weight_dtype=weight_dtype,
                                    routes=routes)
     return CompiledModel(cfg=cfg, backend=backend, folded=tree,
-                         plan=resolved, fwd=lower(tree, cfg, backend,
-                                                  jit=jit))
+                         plan=resolved,
+                         fwd=lower(tree, cfg, backend, jit=jit,
+                                   layer_occupancy=sparse_occ))

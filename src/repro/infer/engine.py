@@ -51,7 +51,12 @@ class Request:
     t_done: float = 0.0
 
     @property
-    def latency_s(self) -> float:
+    def latency_s(self) -> float | None:
+        """Submit-to-done latency; ``None`` while the request is still in
+        flight (``t_done`` unset) — the raw subtraction would report a
+        nonsense negative number against a live ``t_submit``."""
+        if not self.t_done:
+            return None
         return self.t_done - self.t_submit
 
 
@@ -91,6 +96,18 @@ def validate_images(images, image_shape) -> np.ndarray:
     return arr
 
 
+def batch_occupancy(images) -> float:
+    """Fraction of set bits across a uint8 image batch — the serving-level
+    spike-occupancy proxy (pixel bits are exactly what the SSSC front end
+    consumes as value planes). Pass only the REAL rows of a padded batch;
+    zero pad rows would dilute the measurement. Returns 0.0 for an empty
+    batch."""
+    arr = np.asarray(images, np.uint8)
+    if not arr.size:
+        return 0.0
+    return float(np.unpackbits(arr.reshape(-1)).mean())
+
+
 def assemble_batch(images: list, bucket: int):
     """Stack per-image arrays and zero-pad up to the bucket shape.
 
@@ -107,28 +124,43 @@ def assemble_batch(images: list, bucket: int):
 
 @dataclasses.dataclass
 class StepAccounting:
-    """Per-step serving accounting: batches, rows, pad waste, timing."""
+    """Per-step serving accounting: batches, rows, pad waste, timing, and
+    spike occupancy (rows-weighted, when steps measure it)."""
     batches: int = 0
     images: int = 0
     padded_rows: int = 0
     total_rows: int = 0
     busy_s: float = 0.0         # model-step compute only
     wall_s: float = 0.0         # whole steps incl. batch assembly
+    occupancy_weighted: float = 0.0   # sum of per-step occupancy * rows
+    occupancy_rows: int = 0           # rows with a measured occupancy
 
     def record_step(self, *, rows: int, bucket: int, busy_s: float,
-                    wall_s: float) -> None:
+                    wall_s: float, occupancy: float | None = None) -> None:
         self.batches += 1
         self.images += rows
         self.padded_rows += bucket - rows
         self.total_rows += bucket
         self.busy_s += busy_s
         self.wall_s += wall_s
+        if occupancy is not None:
+            self.occupancy_weighted += float(occupancy) * rows
+            self.occupancy_rows += rows
 
     @property
     def pad_waste(self) -> float:
         """Padded rows / total rows across all steps so far — the cost
         multi-bucket dispatch exists to cut."""
         return self.padded_rows / self.total_rows if self.total_rows else 0.0
+
+    @property
+    def occupancy(self) -> float | None:
+        """Rows-weighted mean spike occupancy over measured steps, ``None``
+        when no step ever measured it (distinguishable from a true 0.0 —
+        an all-dark batch is a measurement, absence is not)."""
+        if not self.occupancy_rows:
+            return None
+        return self.occupancy_weighted / self.occupancy_rows
 
     @property
     def fps(self) -> float:
@@ -140,16 +172,21 @@ class StepAccounting:
 
 def latency_summary(latencies_s, *, prefix: str = "latency_") -> dict:
     """p50/p95/p99/mean over per-request latencies, ``None`` when empty —
-    the shared tail-latency report for engine/runtime/loadgen stats."""
+    the shared tail-latency report for engine/runtime/loadgen stats.
+
+    Values are seconds rounded to 6 decimals (microsecond precision):
+    serving steps on small models land well under a millisecond, and the
+    bench comparisons read these fields — rounding to 4 would collapse
+    real sub-millisecond p50/p99 deltas into quantization noise."""
     lat = np.asarray(list(latencies_s), np.float64)
     if not len(lat):
         return {f"{prefix}{k}": None for k in ("p50_s", "p95_s", "p99_s",
                                                "mean_s")}
     return {
-        f"{prefix}p50_s": round(float(np.percentile(lat, 50)), 4),
-        f"{prefix}p95_s": round(float(np.percentile(lat, 95)), 4),
-        f"{prefix}p99_s": round(float(np.percentile(lat, 99)), 4),
-        f"{prefix}mean_s": round(float(lat.mean()), 4),
+        f"{prefix}p50_s": round(float(np.percentile(lat, 50)), 6),
+        f"{prefix}p95_s": round(float(np.percentile(lat, 95)), 6),
+        f"{prefix}p99_s": round(float(np.percentile(lat, 99)), 6),
+        f"{prefix}mean_s": round(float(lat.mean()), 6),
     }
 
 
@@ -192,9 +229,18 @@ class MicroBatchEngine:
 
     def submit(self, request_or_images, rid: int | None = None) -> Request:
         """Queue a ``Request`` (or raw images, wrapped into one). Images are
-        validated against the compiled model's input spec at this door."""
+        validated against the compiled model's input spec at this door.
+
+        ``rid`` names the request id for raw images; for a ``Request``
+        instance it must agree with ``req.rid`` — silently ignoring a
+        conflicting ``rid=`` would complete the request under an id the
+        caller never sees again."""
         if isinstance(request_or_images, Request):
             req = request_or_images
+            if rid is not None and rid != req.rid:
+                raise ValueError(
+                    f"submit(rid={rid}) conflicts with the Request's own "
+                    f"rid={req.rid}; drop the argument or pass raw images")
             req.images = validate_images(req.images,
                                          self.model.input_shape()[1:])
         else:
@@ -240,6 +286,7 @@ class MicroBatchEngine:
         work = [self.queue.popleft()
                 for _ in range(min(bucket, len(self.queue)))]
         batch, _ = assemble_batch([req.images[i] for req, i in work], bucket)
+        occ = batch_occupancy(batch[:len(work)])  # real rows only
         t0 = time.perf_counter()
         logits = np.asarray(self.model.step(batch))
         busy_s = time.perf_counter() - t0
@@ -253,7 +300,8 @@ class MicroBatchEngine:
                 req.t_done = now
                 self.done.append(req)
         self.acct.record_step(rows=len(work), bucket=bucket, busy_s=busy_s,
-                              wall_s=time.perf_counter() - t_start)
+                              wall_s=time.perf_counter() - t_start,
+                              occupancy=occ)
         return len(work)
 
     def run(self) -> list[Request]:
@@ -285,5 +333,7 @@ class MicroBatchEngine:
             "padded_rows": acct.padded_rows,
             "total_rows": acct.total_rows,
             "pad_waste": round(acct.pad_waste, 4),
+            "occupancy": (None if acct.occupancy is None
+                          else round(acct.occupancy, 4)),
             **latency_summary(r.latency_s for r in self.done),
         }

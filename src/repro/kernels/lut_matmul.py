@@ -34,6 +34,7 @@ chunk accumulation in int32).
 from __future__ import annotations
 
 import dataclasses
+import math
 
 import jax.numpy as jnp
 from jax import lax
@@ -173,6 +174,77 @@ def lut_matmul(idx, table, *, block_n: int | None = None):
     return y.astype(jnp.float32)
 
 
+def sparse_budget(c: int, occupancy: float) -> int:
+    """Static per-row gather budget for the zero-chunk-skipping route.
+
+    ``occupancy`` is the calibrated *chunk* occupancy — the fraction of
+    nonzero chunk-index bytes the layer's packed inputs carry (what
+    ``infer.backends.chunk_occupancy`` measures) — so the expected nonzero
+    chunks per row is ``occupancy * c``. One extra chunk of slack absorbs
+    calibration jitter; rows that still exceed the budget fall back to the
+    dense gather inside ``lut_matmul_sparse`` (exact, just not faster).
+    """
+    if not 0.0 <= occupancy <= 1.0:
+        raise ValueError(f"occupancy must be in [0, 1], got {occupancy!r}")
+    return min(c, max(1, math.ceil(occupancy * c) + 1))
+
+
+def lut_matmul_sparse(idx, table, *, max_chunks: int,
+                      block_n: int | None = None):
+    """Zero-chunk-skipping gather: like ``lut_matmul`` but each row gathers
+    only its first ``max_chunks`` nonzero index bytes.
+
+    Per (plane, row), the nonzero chunk indices are compacted to the front
+    via a cumsum rank (each nonzero byte's position among its row's
+    nonzeros) matched against the output slots — ascending chunk order is
+    inherited from the cumsum, so the fold visits the surviving chunks in
+    the SAME order as the dense route. (``lax.top_k`` would compact too,
+    but is ~10x slower than these elementwise ops on the CPU backend.)
+    The skipped positions would have gathered ``table[c, 0, :]`` — built as
+    an ascending-bit fold of ``0 * w`` it is exactly +0.0 (int16 tables: 0)
+    — and ``x + (+0.0) == x`` for every accumulator value this route can
+    produce, so dropping them is a bitwise identity. Slots past a row's
+    nonzero count match nothing, leaving a flattened index of 0 =
+    ``table[0, 0, :]``: the same zero entry. When ANY row holds more than
+    ``max_chunks`` nonzero bytes the whole call falls back to the dense
+    gather (``lax.cond``) — miscalibrated occupancy costs speed, never
+    correctness.
+    """
+    c, _, n = table.shape
+    assert idx.shape[-1] == c, (idx.shape, table.shape)
+    assert max_chunks >= 1, max_chunks
+    if max_chunks >= c:
+        return lut_matmul(idx, table, block_n=block_n)
+    if block_n is not None and n > block_n:
+        outs = [lut_matmul_sparse(idx, table[..., s:s + block_n],
+                                  max_chunks=max_chunks)
+                for s in range(0, n, block_n)]
+        return jnp.concatenate(outs, axis=-1)
+    nz = idx != 0
+    pos = jnp.cumsum(nz.astype(jnp.int32), axis=-1) - 1    # rank among nz
+    slots = jnp.arange(max_chunks, dtype=jnp.int32)
+    match = (pos[..., None, :] == slots[:, None]) & nz[..., None, :]
+    # flattened (chunk, byte) gather index; unmatched slots sum to 0
+    val = (jnp.arange(c, dtype=jnp.int32) * 256 + idx.astype(jnp.int32))
+    gidx = jnp.where(match, val[..., None, :], 0).sum(-1)  # (..., B)
+    nnz_max = jnp.max(pos[..., -1]) + 1
+    acc_int = jnp.issubdtype(table.dtype, jnp.integer)
+    flat = table.reshape(c * 256, n)
+
+    def gather_sparse(_):
+        g0 = jnp.take(flat, gidx[..., 0], axis=0)
+        y = g0.astype(jnp.int32) if acc_int else g0
+        for j in range(1, max_chunks):
+            gj = jnp.take(flat, gidx[..., j], axis=0)
+            y = y + (gj.astype(jnp.int32) if acc_int else gj)
+        return y.astype(jnp.float32)
+
+    def gather_dense(_):
+        return lut_matmul(idx, table)
+
+    return lax.cond(nnz_max <= max_chunks, gather_sparse, gather_dense, None)
+
+
 def lut_matmul_planes(planes, w):
     """The route's bit-exact oracle on unpacked planes: (R, M, K) {0,1}
     float32 x (K, N) -> (R, M, N) f32 via the IDENTICAL reduction tree as
@@ -233,6 +305,9 @@ class RouteConstants:
     int_gather_discount: float = 0.5   # int16 tables halve gather bandwidth
     cache_bytes: int = 1 << 21   # table size where gathers stop hitting L2
     cache_penalty: float = 3.0   # gather-cost multiplier past cache_bytes
+    compact_cost: float = 40.0   # sparse route: per (index byte x slot)
+                                 # compaction element (cumsum + one-hot
+                                 # select; N-independent, int32-bound)
 
     def to_dict(self) -> dict:
         return dataclasses.asdict(self)
@@ -253,9 +328,10 @@ DEFAULT_ROUTE_CONSTANTS = RouteConstants()
 def choose_route(*, m: int, k: int, n: int, g: int, t: int,
                  weights_are_int: bool = False,
                  max_table_bytes: int = MAX_TABLE_BYTES,
-                 constants: RouteConstants | None = None) -> str:
-    """Pick "lut" or "unpack" for a packed matmul of (t live planes, M rows,
-    K inputs, N outputs, G plane groups) on the CPU route.
+                 constants: RouteConstants | None = None,
+                 occupancy: float | None = None) -> str:
+    """Pick "lut", "lut_sparse" or "unpack" for a packed matmul of (t live
+    planes, M rows, K inputs, N outputs, G plane groups) on the CPU route.
 
     The LUT route wins when its gather traffic (t*M*C*N table elements)
     undercuts the dot's t*M*K*N FMAs plus the t*M*K unpack writes it
@@ -264,6 +340,15 @@ def choose_route(*, m: int, k: int, n: int, g: int, t: int,
     unpack route, which stays the bit-exact mirror of the float reference.
     ``constants`` overrides the host cost model (autotuned plans pass the
     fitted values; ``None`` keeps the committed defaults).
+
+    ``occupancy`` is a measured/calibrated CHUNK occupancy (fraction of
+    nonzero chunk-index bytes — ``infer.backends.chunk_occupancy``); when
+    given, the zero-chunk-skipping gather competes too: its traffic scales
+    with the *nonzero* chunks per row (``sparse_budget(c, occupancy)``
+    gathers instead of c) plus an N-independent compaction term over the
+    t*M*C index bytes times the slot count. ``None`` — no calibration —
+    never picks the sparse route: sparsity claims must be measured, not
+    assumed.
     """
     cc = DEFAULT_ROUTE_CONSTANTS if constants is None else constants
     c = num_k_chunks(k)
@@ -277,4 +362,12 @@ def choose_route(*, m: int, k: int, n: int, g: int, t: int,
     lut_cost = (t * m * c * n * gather_scale * cache_penalty
                 + g * m * k * cc.transpose_cost)
     unpack_cost = t * m * k * (n + cc.unpack_cost)
+    if occupancy is not None:
+        budget = sparse_budget(c, occupancy)
+        if budget < c:
+            sparse_cost = (t * m * budget * n * gather_scale * cache_penalty
+                           + g * m * k * cc.transpose_cost
+                           + t * m * c * budget * cc.compact_cost)
+            if sparse_cost < lut_cost and sparse_cost < unpack_cost:
+                return "lut_sparse"
     return "lut" if lut_cost < unpack_cost else "unpack"

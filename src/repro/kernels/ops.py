@@ -29,23 +29,34 @@ from ..core.spike import bitplanes_u8, num_plane_groups, unpack_timesteps
 
 
 def _resolve_route(route, table, *, m, k, n, g, t, weights_are_int,
-                   constants=None):
+                   constants=None, occupancy=None):
     """Route resolution for the packed CPU matmuls.
 
     ``None`` is the *safe* default: LUT only when the caller (the session
     planner) supplies a prebuilt table — so un-planned callers keep the
-    single-dot unpack route that mirrors the float reference bit for bit.
-    "auto" applies ``choose_route`` inline (``constants`` overrides the
-    cost model — plans carry autotuned values); "lut"/"unpack" force.
+    single-dot unpack route that mirrors the float reference bit for bit;
+    a calibrated ``occupancy`` alongside the table upgrades that default to
+    the zero-chunk-skipping gather (bit-identical, see
+    ``lut_matmul.lut_matmul_sparse``). "auto" applies ``choose_route``
+    inline (``constants`` overrides the cost model — plans carry autotuned
+    values); "lut"/"lut_sparse"/"unpack" force. The forced sparse route
+    requires ``occupancy`` — the gather budget is a static compile-time
+    value derived from it, not something to guess.
     """
     if route is None:
-        return "lut" if table is not None else "unpack"
+        if table is None:
+            return "unpack"
+        return "lut_sparse" if occupancy is not None else "lut"
     if route == "auto":
         return choose_route(m=m, k=k, n=n, g=g, t=t,
                             weights_are_int=weights_are_int,
-                            constants=constants)
-    if route not in ("lut", "unpack"):
+                            constants=constants, occupancy=occupancy)
+    if route not in ("lut", "lut_sparse", "unpack"):
         raise ValueError(f"unknown packed-matmul route {route!r}")
+    if route == "lut_sparse" and occupancy is None:
+        raise ValueError("route='lut_sparse' requires a calibrated "
+                         "occupancy (the static gather budget comes from "
+                         "it); measure with infer.backends.chunk_occupancy")
     return route
 
 
@@ -144,7 +155,7 @@ def flash_attention(q, k, v, *, scale: float, causal: bool = True,
 
 def spike_linear(x_packed, w, bias=None, *, t: int,
                  pallas: bool | None = None, route: str | None = None,
-                 table=None, route_constants=None, **blocks):
+                 table=None, route_constants=None, occupancy=None, **blocks):
     """Packed WSSL (weight-stationary spiking linear).
 
     Args:
@@ -153,14 +164,20 @@ def spike_linear(x_packed, w, bias=None, *, t: int,
       w: (K, N) weights; bias: optional (N,) added to every timestep.
       t: number of live timesteps (bits past t-1 must be zero).
       pallas: backend override (the Pallas branch ignores ``route``).
-      route: CPU-route selection — None (LUT iff ``table`` given, else the
-        unpack oracle), "auto" (the ``choose_route`` heuristic), or a forced
-        "lut" / "unpack".
+      route: CPU-route selection — None (LUT iff ``table`` given, sparse
+        LUT iff additionally ``occupancy`` given, else the unpack oracle),
+        "auto" (the ``choose_route`` heuristic), or a forced "lut" /
+        "lut_sparse" / "unpack".
       table: prebuilt ``lut_matmul.build_lut(w)`` result, cached by the
         compile-time route planner so the 256-entry chunk sums are paid
         once per layer, not per batch.
       route_constants: ``RouteConstants`` override for the route="auto"
         cost model (plans carry autotuned values; None = defaults).
+      occupancy: calibrated CHUNK occupancy of this layer's packed inputs
+        (``infer.backends.chunk_occupancy`` — fraction of nonzero index
+        bytes), a STATIC python float: the sparse route's per-row gather
+        budget is fixed at trace time from it. Inputs denser than the
+        calibration fall back to the dense gather inside the kernel.
 
     Returns:
       (t, ..., N) f32 per-timestep accumulators. On the CPU unpack route all
@@ -168,8 +185,11 @@ def spike_linear(x_packed, w, bias=None, *, t: int,
       ``unified.wssl``, hence bit-exact vs the float reference); the LUT
       route gathers chunk partial sums byte-wise with no unpacked tensor
       (bit-exact vs ``lut.lut_matmul_planes``, the fold-order oracle the
-      reference backend emulates for planned layers). The Pallas route runs
-      the grouped kernel, one weight fetch per group of 8 planes.
+      reference backend emulates for planned layers) and the sparse LUT
+      route additionally skips zero index bytes (still bit-exact — the
+      skipped ``table[c, 0, :]`` entry is the exact-zero identity). The
+      Pallas route runs the grouped kernel, one weight fetch per group of
+      8 planes.
     """
     g = x_packed.shape[0]
     assert g == num_plane_groups(t), (g, t)
@@ -178,17 +198,23 @@ def spike_linear(x_packed, w, bias=None, *, t: int,
     for d in lead:
         m *= d
     n = w.shape[-1]
+    resolved = (None if use_pallas(pallas) else _resolve_route(
+        route, table, m=m, k=k, n=n, g=g, t=t,
+        weights_are_int=lut._is_int_kernel(w),
+        constants=route_constants, occupancy=occupancy))
     if use_pallas(pallas):
         x2 = x_packed.reshape(g, -1, k)
         per8 = _spike_matmul_pallas(x2, w, mode="per_plane",
                                     interpret=not on_tpu(), **blocks)
         per = per8.reshape(g * 8, m, n)[:t]                # (t, M, N)
-    elif _resolve_route(route, table, m=m, k=k, n=n, g=g, t=t,
-                        weights_are_int=lut._is_int_kernel(w),
-                        constants=route_constants) == "lut":
+    elif resolved in ("lut", "lut_sparse"):
         tbl = lut.build_lut(w) if table is None else table
         idx = lut.plane_indices(x_packed)[:t]              # (t, ..., C)
-        per = lut.lut_matmul(idx, tbl)                     # (t, ..., N)
+        if resolved == "lut_sparse":
+            budget = lut.sparse_budget(tbl.shape[0], occupancy)
+            per = lut.lut_matmul_sparse(idx, tbl, max_chunks=budget)
+        else:
+            per = lut.lut_matmul(idx, tbl)                 # (t, ..., N)
         if bias is not None:
             per = per + bias.astype(per.dtype)
         return per
@@ -204,7 +230,7 @@ def spike_linear(x_packed, w, bias=None, *, t: int,
 
 def sssc_linear(x_u8, w, bias=None, *, pallas: bool | None = None,
                 route: str | None = None, table=None, route_constants=None,
-                **blocks):
+                occupancy=None, **blocks):
     """Packed SSSC (shift-and-sum spiking conv, as a linear over 8 bit-planes).
 
     Args:
@@ -216,6 +242,9 @@ def sssc_linear(x_u8, w, bias=None, *, pallas: bool | None = None,
         bytes are the LUT index source directly (an 8x8 bit transpose turns
         K value bytes into ceil(K/8) per-plane index bytes), and the 2^p
         plane combine uses the defined ``shift_sum_fold`` order.
+      occupancy: calibrated chunk occupancy of the transposed value bytes
+        (``infer.backends.value_chunk_occupancy``), static — enables the
+        zero-chunk-skipping gather exactly as in ``spike_linear``.
 
     Returns:
       (..., N) f32 accumulators, ``y = sum_p 2^p (plane_p . W)`` — identical
@@ -226,15 +255,22 @@ def sssc_linear(x_u8, w, bias=None, *, pallas: bool | None = None,
     x2 = x_u8.reshape(-1, k)
     m = x2.shape[0]
     n = w.shape[-1]
+    resolved = (None if use_pallas(pallas) else _resolve_route(
+        route, table, m=m, k=k, n=n, g=1, t=8,
+        weights_are_int=lut._is_int_kernel(w),
+        constants=route_constants, occupancy=occupancy))
     if use_pallas(pallas):
         y = _spike_matmul_pallas(x2, w, mode="shift_sum",
                                  interpret=not on_tpu(), **blocks)
-    elif _resolve_route(route, table, m=m, k=k, n=n, g=1, t=8,
-                        weights_are_int=lut._is_int_kernel(w),
-                        constants=route_constants) == "lut":
+    elif resolved in ("lut", "lut_sparse"):
         tbl = lut.build_lut(w) if table is None else table
         idx = lut.plane_indices(x_u8[None])                # (8, ..., C)
-        y = lut.shift_sum_fold(lut.lut_matmul(idx, tbl))   # (..., N)
+        if resolved == "lut_sparse":
+            budget = lut.sparse_budget(tbl.shape[0], occupancy)
+            per = lut.lut_matmul_sparse(idx, tbl, max_chunks=budget)
+        else:
+            per = lut.lut_matmul(idx, tbl)
+        y = lut.shift_sum_fold(per)                        # (..., N)
         if bias is not None:
             y = y + bias.astype(y.dtype)
         return y

@@ -40,7 +40,8 @@ from concurrent.futures import Future
 import numpy as np
 
 from ..infer.engine import (PAPER_FPS, Request, StepAccounting,
-                            assemble_batch, latency_summary, validate_images)
+                            assemble_batch, batch_occupancy, latency_summary,
+                            validate_images)
 from .scheduler import ContinuousBatchingScheduler, QueueFull, ServePolicy
 
 
@@ -255,6 +256,7 @@ class AsyncServeRuntime:
                 t_start = self._clock()
                 batch, _ = assemble_batch([req.images[i] for req, i in work],
                                           d.bucket)
+                occ = batch_occupancy(batch[:len(work)])  # real rows only
                 t0 = self._clock()
                 logits = np.asarray(self.model.step(batch))
                 busy_s = self._clock() - t0
@@ -282,8 +284,9 @@ class AsyncServeRuntime:
                         completed.append(req)
                 self.acct.record_step(rows=len(work), bucket=d.bucket,
                                       busy_s=busy_s,
-                                      wall_s=self._clock() - t_start)
-                self.scheduler.observe_step(d.bucket, busy_s)
+                                      wall_s=self._clock() - t_start,
+                                      occupancy=occ)
+                self.scheduler.observe_step(d.bucket, busy_s, occupancy=occ)
             # callbacks/futures OUTSIDE the lock: user code may submit
             for (req, i), lab in zip(work, labels):
                 if req.on_image is not None:
@@ -324,6 +327,8 @@ class AsyncServeRuntime:
             "padded_rows": acct.padded_rows,
             "total_rows": acct.total_rows,
             "pad_waste": round(acct.pad_waste, 4),
+            "occupancy": (None if acct.occupancy is None
+                          else round(acct.occupancy, 4)),
             **latency_summary(r.latency_s for r in done),
         }
         slo_s = self.scheduler.policy.slo_s

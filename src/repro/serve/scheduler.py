@@ -50,10 +50,16 @@ class ServePolicy:
     ``slo_ms`` — per-request latency target; ``None`` disables SLO pressure
     (the window is then bounded by ``max_wait_ms`` alone).
     ``max_queue_images`` — admission bound on queued images.
+    ``sparse_occupancy`` — spike-occupancy threshold splitting observed
+    step times into a "sparse" and a "dense" EWMA per bucket (a sparse
+    batch through the zero-chunk-skipping route is measurably cheaper, and
+    folding both populations into one EWMA makes the SLO deadline wrong
+    for whichever class is current); ``None`` disables the split.
     """
     max_wait_ms: float = 25.0
     slo_ms: float | None = None
     max_queue_images: int = 512
+    sparse_occupancy: float | None = 0.35
 
     def __post_init__(self):
         if self.max_wait_ms < 0:
@@ -65,6 +71,10 @@ class ServePolicy:
         if self.max_queue_images < 1:
             raise ValueError(f"max_queue_images must be >= 1, got "
                              f"{self.max_queue_images!r}")
+        if (self.sparse_occupancy is not None
+                and not 0.0 < self.sparse_occupancy <= 1.0):
+            raise ValueError(f"sparse_occupancy must be in (0, 1] (or "
+                             f"None), got {self.sparse_occupancy!r}")
 
     @property
     def max_wait_s(self) -> float:
@@ -106,6 +116,11 @@ class ContinuousBatchingScheduler:
             raise ValueError(f"buckets must be >= 1, got {buckets!r}")
         self.policy = policy or ServePolicy()
         self._step_s: dict[int, float] = {}   # bucket -> EWMA step seconds
+        # (bucket, "sparse"|"dense") -> EWMA step seconds, fed only when
+        # the runtime measures batch occupancy; the overall per-bucket
+        # EWMA above always updates, so the class split can only refine
+        self._class_step_s: dict[tuple, float] = {}
+        self._occ_ewma: float | None = None   # EWMA of observed occupancy
 
     # -- admission ----------------------------------------------------------
 
@@ -117,18 +132,48 @@ class ContinuousBatchingScheduler:
 
     # -- service-time model -------------------------------------------------
 
-    def observe_step(self, bucket: int, seconds: float) -> None:
+    def _occupancy_class(self, occupancy: float) -> str | None:
+        """"sparse" or "dense" under the policy threshold, ``None`` when
+        the split is disabled."""
+        thr = self.policy.sparse_occupancy
+        if thr is None:
+            return None
+        return "sparse" if occupancy < thr else "dense"
+
+    def observe_step(self, bucket: int, seconds: float,
+                     occupancy: float | None = None) -> None:
         """Feed one measured step time into the per-bucket EWMA the SLO
-        deadline uses. The runtime calls this after every step."""
+        deadline uses. The runtime calls this after every step; when it
+        also measured the batch's spike occupancy, the sample additionally
+        updates the (bucket, sparse|dense) class EWMA so the deadline can
+        condition on how cheap the current traffic actually is."""
         prev = self._step_s.get(bucket)
         self._step_s[bucket] = (seconds if prev is None
                                 else 0.8 * prev + 0.2 * seconds)
+        if occupancy is None:
+            return
+        self._occ_ewma = (occupancy if self._occ_ewma is None
+                          else 0.8 * self._occ_ewma + 0.2 * occupancy)
+        cls = self._occupancy_class(occupancy)
+        if cls is not None:
+            key = (bucket, cls)
+            prev = self._class_step_s.get(key)
+            self._class_step_s[key] = (seconds if prev is None
+                                       else 0.8 * prev + 0.2 * seconds)
 
-    def service_estimate(self, bucket: int) -> float:
-        """Expected step seconds for ``bucket``: its own EWMA when observed,
-        else the slowest observed bucket (conservative — over-estimating
-        dispatches earlier, never later), else 0 (no data: only
-        ``max_wait_ms`` bounds the window)."""
+    def service_estimate(self, bucket: int,
+                         occupancy: float | None = None) -> float:
+        """Expected step seconds for ``bucket``: the (bucket, class) EWMA
+        when an occupancy is given (or the running occupancy EWMA stands
+        in) and that class has been observed; else the bucket's overall
+        EWMA; else the slowest observed bucket (conservative —
+        over-estimating dispatches earlier, never later); else 0 (no data:
+        only ``max_wait_ms`` bounds the window)."""
+        occ = occupancy if occupancy is not None else self._occ_ewma
+        if occ is not None:
+            cls = self._occupancy_class(occ)
+            if cls is not None and (bucket, cls) in self._class_step_s:
+                return self._class_step_s[(bucket, cls)]
         if bucket in self._step_s:
             return self._step_s[bucket]
         if self._step_s:
@@ -163,9 +208,14 @@ class ContinuousBatchingScheduler:
         deadline = oldest_submit_s + self.policy.max_wait_s
         reason = "max_wait deadline reached"
         if self.policy.slo_s is not None:
-            # leave the oldest request enough budget to actually run
-            slo_deadline = (oldest_submit_s + self.policy.slo_s
-                            - self.service_estimate(bucket))
+            # Leave the oldest request enough budget to actually run — over
+            # the WHOLE pad-minimizing split, not just the first chunk: the
+            # oldest request's last image may land in the final chunk of a
+            # multi-chunk backlog, so its completion pays every step in the
+            # split, and reserving one step's worth under-budgets the rest.
+            est = sum(self.service_estimate(b)
+                      for _, b in plan_chunks(backlog, self.buckets))
+            slo_deadline = oldest_submit_s + self.policy.slo_s - est
             if slo_deadline < deadline:
                 deadline, reason = slo_deadline, "SLO pressure"
         if now_s >= deadline:
