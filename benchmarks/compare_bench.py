@@ -11,6 +11,9 @@ smoke, full vs full — timings across configs are not comparable):
     silently falling off a cliff — drags every point down together; CI
     runner noise hits single points, which a per-point gate would flake on
     and the geomean absorbs.
+  * occupancy-sweep and pallas-sweep rows must each stay bit-exact and
+    non-lossy vs the baseline (pallas timings are interpret-mode on CPU
+    hosts and are never compared — only exactness and row presence gate).
 
   PYTHONPATH=src python benchmarks/compare_bench.py current.json \
       [--baseline BENCH_infer.json] [--min-ratio 0.4]
@@ -84,6 +87,30 @@ def compare(current: dict, baseline: dict, *, min_ratio: float):
         failures.append(
             f"occupancy-sweep row for firing rate {rate:g} present in the "
             f"committed baseline but missing from the current record")
+    # pallas-route rows (interpret-mode kernels vs their CPU fold-order
+    # oracles). The timings are interpreter timings, never compared — the
+    # hard gates are exactness per row and non-lossy (route, weight_dtype)
+    # coverage: a pallas route that silently drops out of the sweep or
+    # stops matching its oracle fails here, not in a later TPU run.
+    def pallas_key(r):
+        return (r["route"], r["weight_dtype"])
+
+    base_pallas = {pallas_key(r): r for r in baseline.get("pallas_sweep", [])}
+    for r in current.get("pallas_sweep", []):
+        print(f"pallas {r['route']}/{r['weight_dtype']} "
+              f"(t={r['timesteps']}, {r['m']}x{r['k']}x{r['n']}, "
+              f"interpret={r.get('interpret')}): "
+              f"pallas {r['pallas_s'] * 1e6:.0f}us vs cpu "
+              f"{r['cpu_s'] * 1e6:.0f}us (exact={r['exact']})")
+        if not r.get("exact", False):
+            failures.append(
+                f"pallas row {pallas_key(r)}: kernel output is not "
+                f"bit-exact against its CPU oracle")
+    cur_pallas = {pallas_key(r) for r in current.get("pallas_sweep", [])}
+    for key in sorted(set(base_pallas) - cur_pallas):
+        failures.append(
+            f"pallas-sweep row {key} present in the committed baseline "
+            f"but missing from the current record")
     # engine-level serving rows (informational: absolute fps on a CI runner
     # is noise, but the rows must exist so the serving path can't silently
     # drop out of the benchmark)

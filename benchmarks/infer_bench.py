@@ -27,6 +27,13 @@ traces at two rates through ``repro.serve.AsyncServeRuntime`` and records
 what a closed-loop drain cannot: goodput, p99 latency, and SLO attainment
 (``serving_load`` rows; ``compare_bench.py`` guards them non-lossy).
 
+A fourth layer, the PALLAS SWEEP, runs the Pallas kernel routes (VMEM
+byte-LUT gather, grouped unpack-dot) against their CPU fold-order oracles
+at a tail-timestep/odd-K shape. On a CPU host the kernels execute under
+the Pallas interpreter, so each row carries ``interpret: true`` and its
+timings measure the interpreter, never the accelerator — the gate is
+exactness plus row presence, not speed.
+
   PYTHONPATH=src python benchmarks/infer_bench.py [--batch-size 8] [--out [f]]
   PYTHONPATH=src python benchmarks/infer_bench.py --smoke     # tiny, CI gate
 """
@@ -43,10 +50,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.spike import num_plane_groups, structured_spikes
+from repro.core.spike import (num_plane_groups, pack_timesteps,
+                              structured_spikes)
 from repro.core.spikformer import SpikformerConfig, init as spik_init
 from repro.infer import (ExecutionPlan, MicroBatchEngine, benchmark_session,
                          chunk_occupancy, compile as infer_compile)
+from repro.kernels import lut_matmul as lut
 from repro.kernels import ops
 from repro.kernels.lut_matmul import sparse_budget
 from repro.serve import (AsyncServeRuntime, ServePolicy, image_maker,
@@ -153,6 +162,54 @@ def run_occupancy_sweep(*, rates=(0.1, 0.2, 0.3), m: int, k: int, n: int,
     return rows
 
 
+def run_pallas_sweep(*, t: int = 9, m: int = 24, k: int = 33, n: int = 12,
+                     rate: float = 0.3, repeats: int = 3,
+                     seed: int = 0) -> list:
+    """Pallas-route rows: the real kernels (VMEM byte-LUT gather, grouped
+    unpack-dot) vs their CPU fold-order oracles on one spiking linear at a
+    deliberately awkward shape — tail timesteps (t=9 -> a 1-bit second
+    plane group) and an odd K (33 -> a 1-lane tail chunk).
+
+    Every row carries ``interpret``: on a CPU host the kernels run under
+    the Pallas interpreter, so ``pallas_s`` times the interpreter, NOT an
+    accelerator, and must never feed a speedup gate. What ``compare_bench``
+    DOES gate: each row stays bit-exact against its CPU oracle (the same
+    defined reduction fold, so equality is exact, not toleranced), and the
+    (route, weight_dtype) rows are non-lossy vs the committed baseline.
+    The float32 unpack route is reduction-order-tolerant by contract, so
+    only routes with a bit-exactness contract appear here.
+    """
+    rng = np.random.default_rng(seed + 13)
+    spikes = jnp.asarray(rng.random((t, m, k)) < rate, jnp.float32)
+    x = pack_timesteps(spikes)
+    interp = not ops.on_tpu()
+    weights = {
+        "float32": jnp.asarray(rng.standard_normal((k, n)), jnp.float32),
+        "int8": jnp.asarray(rng.integers(-127, 128, (k, n)), jnp.int8),
+    }
+    rows = []
+    for route, wd in (("lut", "float32"), ("lut", "int8"),
+                      ("unpack", "int8")):
+        w = weights[wd]
+        table = lut.build_lut(w) if route == "lut" else None
+        pal = jax.jit(lambda xx, w=w, table=table, route=route:
+                      ops.spike_linear(xx, w, None, t=t, pallas=True,
+                                       route=route, table=table))
+        cpu = jax.jit(lambda xx, w=w, table=table, route=route:
+                      ops.spike_linear(xx, w, None, t=t, pallas=False,
+                                       route=route, table=table))
+        p_out, c_out = pal(x), cpu(x)
+        exact = bool((np.asarray(p_out) == np.asarray(c_out)).all())
+        rows.append({
+            "route": route, "weight_dtype": wd,
+            "timesteps": t, "m": m, "k": k, "n": n,
+            "interpret": interp, "exact": exact,
+            "pallas_s": round(_best_time(lambda: pal(x), repeats=repeats), 6),
+            "cpu_s": round(_best_time(lambda: cpu(x), repeats=repeats), 6),
+        })
+    return rows
+
+
 def serving_models(params, cfg, *, buckets):
     """Lazy cache of warmed multi-bucket packed models keyed by
     (timesteps, weight_dtype) — the engine-level serving sweep and the
@@ -246,10 +303,13 @@ def run(*, batch_size: int = 8, batches: int = 4, repeats: int = 3,
         rates=occupancy_rates, m=om, k=ok, n=on,
         repeats=occupancy_repeats, seed=seed)
     occ_exact = all(r["exact"] for r in occupancy_sweep)
+    pallas_sweep = run_pallas_sweep(repeats=occupancy_repeats, seed=seed)
+    pallas_exact = all(r["exact"] for r in pallas_sweep)
 
     if occupancy_only:
         # the fast-CI shape of the record: just the kernel-level sparsity
-        # rows and their exactness gate, no model compiles
+        # and pallas-route rows with their exactness gates, no model
+        # compiles
         return {
             "bench": "infer_spikformer",
             "mode": mode,
@@ -257,8 +317,9 @@ def run(*, batch_size: int = 8, batches: int = 4, repeats: int = 3,
             "machine": platform.machine(),
             "config": {"occupancy_shape": list(occupancy_shape),
                        "occupancy_rates": list(occupancy_rates)},
-            "bit_exact": occ_exact,
+            "bit_exact": occ_exact and pallas_exact,
             "occupancy_sweep": occupancy_sweep,
+            "pallas_sweep": pallas_sweep,
             "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
         }
 
@@ -296,13 +357,15 @@ def run(*, batch_size: int = 8, batches: int = 4, repeats: int = 3,
                    "batches": batches,
                    "occupancy_shape": list(occupancy_shape),
                    "occupancy_rates": list(occupancy_rates)},
-        "bit_exact": all(p["bit_exact"] for p in points) and occ_exact,
+        "bit_exact": (all(p["bit_exact"] for p in points)
+                      and occ_exact and pallas_exact),
         "packed": base["packed"],
         "reference": base["reference"],
         "packed_speedup": base["packed_speedup"],
         "activation_traffic_ratio": base["activation_traffic_ratio"],
         "sweep": points,
         "occupancy_sweep": occupancy_sweep,
+        "pallas_sweep": pallas_sweep,
         "serving": serving,
         "serving_load": serving_load,
         "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),

@@ -19,13 +19,23 @@ constants once normalized by the FMA unit), and emits the result as an
 serves under the tuned dispatch. Only the *decisions* change; every route
 stays bit-exact, so a bad fit costs throughput, never correctness.
 
-  PYTHONPATH=src python scripts/autotune_routes.py [--fast] [--out routes.json]
+``--pallas`` additionally times the Pallas kernel pair (VMEM byte-LUT
+gather vs grouped unpack-dot) over a small grid and refits the
+``choose_pallas_route`` constants (``pallas_gather_cost`` /
+``pallas_dot_cost``) in the same FMA unit. On a CPU host those kernels
+run under the Pallas interpreter — the samples are flagged and the fit
+describes the interpreter, so refit on a TPU host before committing the
+constants to a servable plan.
+
+  PYTHONPATH=src python scripts/autotune_routes.py [--fast] [--pallas] \
+      [--out routes.json]
 """
 from __future__ import annotations
 
 import argparse
 import dataclasses
 import json
+import sys
 import time
 
 import jax
@@ -46,6 +56,15 @@ GRID = [
     (2048, 32, 16, 1), (256, 128, 128, 1),
 ]
 FAST_GRID = GRID[:5]
+
+# Pallas grid: small shapes with varied chunk counts (C in {2..5}) and a
+# multi-group point. Deliberately tiny — on a CPU host every point runs
+# under the Pallas interpreter, whose cost still scales with the same
+# traffic volumes the cost model uses, just with a huge unit.
+PALLAS_GRID = [
+    (32, 16, 8, 1), (32, 32, 16, 1), (64, 16, 16, 1),
+    (64, 40, 8, 1), (48, 24, 24, 2),
+]
 
 
 def time_call(fn, *args, repeats: int = 3, inner: int = 4) -> float:
@@ -135,6 +154,40 @@ def measure_sparse_grid(grid=GRID, rates=(0.1, 0.2, 0.3), *,
             if s is not None:
                 print(json.dumps(s))
                 samples.append(s)
+    return samples
+
+
+def measure_pallas_point(m: int, k: int, n: int, g: int, *,
+                         repeats: int = 3, seed: int = 0) -> dict:
+    """Time the Pallas byte-LUT gather kernel against the Pallas grouped
+    unpack-dot kernel for one (M, K, N, G) shape. ``interpret`` flags
+    whether the kernels ran under the Pallas interpreter (any non-TPU
+    host) — such timings calibrate the interpreter, not an accelerator."""
+    t = 8 * g
+    key = jax.random.PRNGKey(seed + 2000)
+    x = jax.random.randint(key, (g, m, k), 0, 256, jnp.uint8)
+    w = jax.random.normal(jax.random.fold_in(key, 1), (k, n), jnp.float32)
+    table = lut.build_lut(w)
+    gather = jax.jit(lambda xx: ops.spike_linear(xx, w, t=t, pallas=True,
+                                                 route="lut", table=table))
+    dot = jax.jit(lambda xx: ops.spike_linear(xx, w, t=t, pallas=True,
+                                              route="unpack"))
+    return {
+        "m": m, "k": k, "n": n, "g": g, "t": t,
+        "c": lut.num_k_chunks(k),
+        "interpret": not ops.on_tpu(),
+        "pallas_lut_s": time_call(gather, x, repeats=repeats),
+        "pallas_dot_s": time_call(dot, x, repeats=repeats),
+    }
+
+
+def measure_pallas_grid(grid=PALLAS_GRID, *, repeats: int = 3,
+                        seed: int = 0) -> list:
+    samples = []
+    for m, k, n, g in grid:
+        s = measure_pallas_point(m, k, n, g, repeats=repeats, seed=seed)
+        print(json.dumps(s))
+        samples.append(s)
     return samples
 
 
@@ -239,12 +292,56 @@ def fit_compact_cost(samples: list, sparse_samples: list, *,
         base, compact_cost=float(np.clip(compact, 1.0, 256.0)))
 
 
+def fit_pallas_constants(samples: list, pallas_samples: list, *,
+                         base: RouteConstants) -> RouteConstants:
+    """Fit (pallas_gather_cost, pallas_dot_cost) for ``choose_pallas_route``
+    from measured Pallas kernel timings, expressed in the SAME FMA unit as
+    the CPU fit (``alpha`` re-derived from the unpack samples, so the two
+    cost models stay comparable in one RouteConstants). The bit-transpose
+    term is pinned at ``base.transpose_cost``; each pallas constant is
+    then a one-coefficient least squares over its traffic volume
+    (t*M*C*N gathered elements, t*M*K*N dot FMAs). Falls back to ``base``
+    whenever the samples cannot identify a positive cost."""
+    sm = [s for s in samples if s["unpack_s"] > 0 and s["lut_s"] > 0]
+    if len(pallas_samples) < 2 or len(sm) < 3:
+        return base
+    fma = np.array([s["t"] * s["m"] * s["k"] * s["n"] for s in sm], float)
+    wr = np.array([s["t"] * s["m"] * s["k"] for s in sm], float)
+    uy = np.array([s["unpack_s"] for s in sm], float)
+    alpha, _ = _lstsq(np.stack([fma, wr], 1), uy)
+    if not np.isfinite(alpha) or alpha <= 0:
+        return base
+    gvol = np.array([s["t"] * s["m"] * s["c"] * s["n"]
+                     for s in pallas_samples], float)
+    gres = np.array([s["pallas_lut_s"] / alpha
+                     - s["g"] * s["m"] * s["k"] * base.transpose_cost
+                     for s in pallas_samples], float)
+    gc, = _lstsq(gvol[:, None], gres)
+    dvol = np.array([s["t"] * s["m"] * s["k"] * s["n"]
+                     for s in pallas_samples], float)
+    dy = np.array([s["pallas_dot_s"] / alpha for s in pallas_samples], float)
+    dc, = _lstsq(dvol[:, None], dy)
+    # interpreter-fitted constants can be orders of magnitude above an
+    # accelerator's; the cap only guards against a degenerate fit blowing
+    # up the JSON, relative ordering is what the dispatch compares
+    clip = lambda v, dflt: (float(np.clip(v, 0.05, 4096.0))
+                            if np.isfinite(v) and v > 0 else dflt)
+    return dataclasses.replace(
+        base,
+        pallas_gather_cost=clip(gc, base.pallas_gather_cost),
+        pallas_dot_cost=clip(dc, base.pallas_dot_cost))
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--fast", action="store_true",
                     help="half the grid, one repeat (CI/smoke)")
     ap.add_argument("--repeats", type=int, default=None)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--pallas", action="store_true",
+                    help="also time the Pallas kernel pair (interpret mode "
+                         "off-TPU) and refit pallas_gather_cost / "
+                         "pallas_dot_cost for choose_pallas_route")
     ap.add_argument("--firing-rates", default=None,
                     help="comma-separated firing rates (e.g. 0.1,0.2,0.3): "
                          "also measure the zero-chunk-skipping route on "
@@ -264,6 +361,13 @@ def main(argv=None):
         sparse_samples = measure_sparse_grid(grid, rates, repeats=repeats,
                                              seed=args.seed)
         constants = fit_compact_cost(samples, sparse_samples, base=constants)
+    pallas_samples = []
+    if args.pallas:
+        p_grid = PALLAS_GRID[:3] if args.fast else PALLAS_GRID
+        pallas_samples = measure_pallas_grid(p_grid, repeats=repeats,
+                                             seed=args.seed)
+        constants = fit_pallas_constants(samples, pallas_samples,
+                                         base=constants)
 
     # the committable artifact: a fragment ExecutionPlan.from_json accepts
     fragment = {"route_constants": constants.to_dict()}
@@ -288,6 +392,20 @@ def main(argv=None):
             == (s["sparse_s"] < s["lut_s"]) for s in sparse_samples)
         summary["sparse_points"] = len(sparse_samples)
         summary["sparse_agreement"] = f"{sagree}/{len(sparse_samples)}"
+    if pallas_samples:
+        pagree = sum(
+            (ops.choose_pallas_route(m=s["m"], k=s["k"], n=s["n"], g=s["g"],
+                                     t=s["t"], constants=constants) == "lut")
+            == (s["pallas_lut_s"] < s["pallas_dot_s"])
+            for s in pallas_samples)
+        summary["pallas_points"] = len(pallas_samples)
+        summary["pallas_agreement"] = f"{pagree}/{len(pallas_samples)}"
+        summary["pallas_interpret"] = bool(pallas_samples[0]["interpret"])
+        if summary["pallas_interpret"]:
+            print("note: pallas samples ran under the Pallas interpreter — "
+                  "the fitted pallas constants describe this host's "
+                  "interpreter; refit on a TPU before serving them",
+                  file=sys.stderr)
     print(json.dumps(summary))
     return constants
 

@@ -21,8 +21,16 @@ if [[ "${1:-}" == "--fast" ]]; then
     ARGS+=(-m "not slow"); shift
 fi
 
+# per-route pallas parity pass counts: tests/test_parity.py records them
+# through the conftest PARITY_SUMMARY hook; merged below into
+# tier1_summary.json and the CI step summary so a sweep that quietly stops
+# covering a route reads as a dropped counter, not a green run
+PARITY_JSON=parity_summary.json
+rm -f "$PARITY_JSON"
+
 T0=$SECONDS
-OUT=$(PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest "${ARGS[@]}" "$@" 2>&1)
+OUT=$(PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} PARITY_SUMMARY="$PARITY_JSON" \
+    python -m pytest "${ARGS[@]}" "$@" 2>&1)
 CODE=$?
 echo "$OUT"
 
@@ -51,6 +59,16 @@ if [[ $CODE -eq 0 ]]; then
     BENCH=$?
 fi
 
+PARITY_TXT=none
+if [[ -f "$PARITY_JSON" ]]; then
+    PARITY_TXT=$(python - "$PARITY_JSON" <<'EOF'
+import json, sys
+p = json.load(open(sys.argv[1]))["parity_passes"]
+print(f"{len(p)} routes / {sum(p.values())} passes")
+EOF
+)
+fi
+
 DURATION=$((SECONDS - T0))
 LINKS_TXT=$([[ $LINKS -eq 0 ]] && echo OK || echo BROKEN)
 BENCH_TXT=$([[ "$BENCH" == 0 ]] && echo OK || echo "$BENCH")
@@ -69,9 +87,9 @@ fi
 
 RESULT_LINE="$RESULT_LINE" ERRORS="$ERRORS" LINKS_TXT="$LINKS_TXT" \
 BENCH_TXT="$BENCH_TXT" STATUS="$STATUS" EXIT_CODE="$EXIT" \
-DURATION="$DURATION" python - <<'EOF'
+DURATION="$DURATION" PARITY_JSON="$PARITY_JSON" python - <<'EOF'
 import json, os
-json.dump({
+summary = {
     "result_line": os.environ["RESULT_LINE"].strip(),
     "collect_errors": int(os.environ["ERRORS"]),
     "doc_links": os.environ["LINKS_TXT"],
@@ -79,7 +97,13 @@ json.dump({
     "status": os.environ["STATUS"],
     "exit_code": int(os.environ["EXIT_CODE"]),
     "duration_s": int(os.environ["DURATION"]),
-}, open("tier1_summary.json", "w"), indent=1)
+}
+try:
+    with open(os.environ["PARITY_JSON"]) as f:
+        summary["parity_passes"] = json.load(f)["parity_passes"]
+except (OSError, KeyError, ValueError):
+    summary["parity_passes"] = {}
+json.dump(summary, open("tier1_summary.json", "w"), indent=1)
 EOF
 
 echo
@@ -88,6 +112,7 @@ echo "  result line : $RESULT_LINE"
 echo "  collect errs: $ERRORS"
 echo "  doc links   : $LINKS_TXT"
 echo "  bench smoke : $BENCH_TXT"
+echo "  parity      : $PARITY_TXT"
 echo "  status      : $STATUS"
 
 if [[ -n "${GITHUB_STEP_SUMMARY:-}" ]]; then
@@ -100,8 +125,23 @@ if [[ -n "${GITHUB_STEP_SUMMARY:-}" ]]; then
         echo "| collect errors | $ERRORS |"
         echo "| doc links | $LINKS_TXT |"
         echo "| bench smoke | $BENCH_TXT |"
+        echo "| parity routes | $PARITY_TXT |"
         echo "| **status** | **$STATUS** |"
     } >> "$GITHUB_STEP_SUMMARY"
+    if [[ -f "$PARITY_JSON" ]]; then
+        {
+            echo ""
+            echo "#### pallas parity passes (interpret mode)"
+            echo ""
+            echo "| route | passes |"
+            echo "|---|---|"
+            python - "$PARITY_JSON" <<'EOF'
+import json, sys
+for k, v in sorted(json.load(open(sys.argv[1]))["parity_passes"].items()):
+    print(f"| {k} | {v} |")
+EOF
+        } >> "$GITHUB_STEP_SUMMARY"
+    fi
 fi
 
 exit $EXIT

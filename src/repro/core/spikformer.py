@@ -264,8 +264,19 @@ def forward_folded(folded, images_u8, cfg: SpikformerConfig, *, backend,
                                scale=cfg.attn_scale, t=t)
         att = wssl(att, ssa["wo"], f"{bp}/ssa/wo")
         x = backend.residual(att, x, cfg.residual)
-        s1 = wssl(x, mlp["fc1"], f"{bp}/mlp/fc1")
-        s2 = wssl(s1, mlp["fc2"], f"{bp}/mlp/fc2")
+        # backends exposing ``mlp_pair_lif`` may fuse the fc1 -> LIF -> fc2
+        # step into one kernel (packed spikes never unpacked in HBM); a
+        # None return means "not applicable here" and the two-layer
+        # composition below is the universal fallback — both are bit-exact
+        # against each other, so the choice never changes logits
+        s2 = None
+        pair = getattr(backend, "mlp_pair_lif", None)
+        if pair is not None:
+            s2 = pair(x, mlp["fc1"], mlp["fc2"], t=t,
+                      **extra(f"{bp}/mlp/fc1"))
+        if s2 is None:
+            s1 = wssl(x, mlp["fc1"], f"{bp}/mlp/fc1")
+            s2 = wssl(s1, mlp["fc2"], f"{bp}/mlp/fc2")
         x = backend.residual(s2, x, cfg.residual)
 
     rate = backend.rate(x, t=t)                         # (B, D)

@@ -36,7 +36,12 @@ The CPU route of PackedBackend performs operation-for-operation the same
 float32 arithmetic as FloatBackend (same reshapes, same dots or the same
 gather/fold tree, same reduction orders), so their logits are bit-identical
 — spikes are binary, there is no tolerance to hide behind, and the parity
-tests assert exact equality.
+tests assert exact equality. The Pallas LUT route keeps the same contract:
+its gather kernel replays lut_matmul's defined ascending-chunk fold with
+one-hot-matmul row selects (exact — 255 of 256 products are exact zeros),
+so table-planned sessions are bit-identical across ALL of {reference,
+packed CPU, packed Pallas}; only the Pallas unpack-dot route on float32
+weights relaxes to reduction-order tolerance (pin "lut" routes there).
 """
 from __future__ import annotations
 
@@ -191,16 +196,21 @@ class PackedBackend:
 
     name = "packed"
 
-    def __init__(self, *, pallas: bool | None = None):
-        self.pallas = pallas
+    # Route planning reads this: BOTH branches now consume the (C,256,N)
+    # tables — the CPU gather route directly, the Pallas branch through the
+    # VMEM-resident byte-LUT gather kernel (``lut_matmul_pallas``) and the
+    # fused pack->TFLIF->matmul kernel. A session planned without tables
+    # still runs: the Pallas route falls back to the grouped unpack-dot
+    # kernel (bit-exact only for integer weights).
+    wants_lut_tables = True
 
-    @property
-    def wants_lut_tables(self) -> bool:
-        """Route planning reads this: the (C,256,N) tables only matter where
-        the CPU gather route will actually execute — the Pallas branch
-        ignores them, so a Pallas-pinned (or on-TPU) session should not pay
-        the precompute or carry the dead weight."""
-        return not ops.use_pallas(self.pallas)
+    def __init__(self, *, pallas: bool | None = None,
+                 fuse_mlp: bool = True):
+        self.pallas = pallas
+        # fuse the MLP fc1 -> LIF -> fc2 step into one Pallas kernel when
+        # possible (see ``mlp_pair_lif``); only consulted on the Pallas
+        # branch — the CPU oracle always runs the two-layer composition
+        self.fuse_mlp = fuse_mlp
 
     def _lif(self, acc, bias, scale):
         """acc (T, ...) -> (G, ...) packed; int8 layers fold their
@@ -241,6 +251,35 @@ class PackedBackend:
                                pallas=self.pallas, table=lut,
                                occupancy=occupancy)
         return self._lif(acc, bias, scale)
+
+    def mlp_pair_lif(self, x, fc1, fc2, *, t: int, occupancy=None):
+        """Fused MLP pair: fc1 matmul -> (LIF + pack + fc2 byte-LUT gather
+        in ONE Pallas kernel) -> fc2 LIF. The unpacked fc1 spike tensor
+        never reaches HBM (``kernels.fused``); the emitted logits are
+        bit-identical to the two-layer path, so ``forward_folded`` may take
+        either.
+
+        Returns None when the fused kernel does not apply — CPU-oracle
+        sessions, ``fuse_mlp=False``, or no (C,256,N) table planned for fc2
+        — and the caller falls back to the unfused two-layer composition.
+        ``occupancy`` is fc1's input calibration, forwarded to its matmul.
+        """
+        if not (self.fuse_mlp and ops.use_pallas(self.pallas)):
+            return None
+        tbl2 = fc2.get("lut")
+        if not ops._have_table(tbl2):
+            return None
+        scale1 = fc1.get("scale")
+        acc1 = ops.spike_linear(x, self._w(fc1["kernel"], scale1), None,
+                                t=t, pallas=self.pallas,
+                                table=fc1.get("lut"), occupancy=occupancy)
+        # fc1's int8 scale folds into its LIF bias/threshold exactly as in
+        # ``_lif`` — the fused kernel sees the same charge/compare operands
+        b1 = fc1["bias"] if scale1 is None else fc1["bias"] / scale1
+        v1 = V_TH if scale1 is None else V_TH / scale1
+        _s1, acc2 = ops.tflif_lut(acc1, b1, table=tbl2, v_th=v1, t=t,
+                                  pallas=self.pallas)
+        return self._lif(acc2, fc2["bias"], fc2.get("scale"))
 
     def stdp_lif(self, q, k, v, *, heads: int, scale: float, t: int):
         g, b, n, d = q.shape
@@ -322,18 +361,22 @@ class OccupancyRecorder(PackedBackend):
 # ---------------------------------------------------------------------------
 
 # keyword-only factories: a misspelled option key must raise TypeError,
-# not silently run the default route
+# not silently run the default route. Every factory accepts + ignores
+# ``interpret`` — it is the registry's device-gate escape hatch (see
+# ``registry.get_backend``), consumed there, but also forwarded here so a
+# pre-resolved options dict round-trips.
 registry.register_backend(
     "packed",
-    lambda *, pallas=None: PackedBackend(pallas=pallas),
+    lambda *, pallas=None, fuse_mlp=True, interpret=None:
+        PackedBackend(pallas=pallas, fuse_mlp=fuse_mlp),
     weight_dtypes=("float32", "int8"),
     device_kinds=("cpu", "tpu"),
-    wants_lut_tables=None,      # instance decides: tables only off-Pallas
+    wants_lut_tables=True,      # both branches gather from planned tables
     overwrite=True)             # survive importlib.reload of this module
 
 registry.register_backend(
     "reference",
-    lambda *, pallas=None: FloatBackend(),   # accepts + ignores pallas
+    lambda *, pallas=None, interpret=None: FloatBackend(),
     weight_dtypes=("float32", "int8"),
     device_kinds=("cpu", "gpu", "tpu"),
     wants_lut_tables=False,     # plan flags only, never (C,256,N) tables
@@ -342,19 +385,20 @@ registry.register_backend(
 
 # The Pallas-pinned packed backend: the registration path the registry
 # docstring promises, as a real registration. Same PackedBackend class,
-# pallas=True forced — the TPU kernel route (interpret mode off-TPU), so
-# route planning never builds (C,256,N) gather tables for it (the Pallas
-# branch ignores them; declared here so the capability is plan-visible
-# without asking the instance).
-def _packed_pallas_factory(*, pallas=True):
+# pallas=True forced — the real kernels on TPU, interpret mode elsewhere
+# (the registry's device gate makes off-TPU use an explicit
+# ``backend_options={'interpret': True}`` opt-in). Route planning DOES
+# build (C,256,N) tables for it: the Pallas byte-LUT gather kernel and the
+# fused MLP kernel consume them from VMEM.
+def _packed_pallas_factory(*, pallas=True, fuse_mlp=True, interpret=None):
     if pallas is not True:
-        # the spec's wants_lut_tables=False assumes the Pallas route; a
-        # pallas=False instance here would run the CPU gather route against
-        # boolean table flags — reject at the door, don't crash in the jit
+        # this registration *is* the Pallas pin; a pallas=False instance
+        # here would belie every capability the spec declares — reject at
+        # the door, don't quietly run the CPU route under the wrong name
         raise ValueError("packed_pallas pins pallas=True; for the CPU "
                          "route use backend='packed' (optionally with "
                          "backend_options={'pallas': False})")
-    return PackedBackend(pallas=True)
+    return PackedBackend(pallas=True, fuse_mlp=fuse_mlp)
 
 
 registry.register_backend(
@@ -362,7 +406,7 @@ registry.register_backend(
     _packed_pallas_factory,
     weight_dtypes=("float32", "int8"),
     device_kinds=("tpu",),
-    wants_lut_tables=False,
+    wants_lut_tables=True,
     aliases=("pallas",),
     overwrite=True)             # survive importlib.reload of this module
 

@@ -41,9 +41,9 @@ from ..core import spikformer
 from ..core.spikformer import SpikformerConfig, fold_inference_params
 from ..kernels import lut_matmul
 from ..kernels.lut_matmul import RouteConstants
-from ..kernels.ops import choose_route
+from ..kernels.ops import choose_pallas_route, choose_route, use_pallas
 
-ROUTES = ("auto", "unpack")
+ROUTES = ("auto", "unpack", "lut")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -74,7 +74,7 @@ class ExecutionPlan:
     weight_dtype: str | None = None     # None: whatever the tree carries
     batch_buckets: tuple[int, ...] = (8,)
     max_table_bytes: int = lut_matmul.MAX_TABLE_BYTES
-    route: str = "auto"                 # "auto" | "unpack"
+    route: str = "auto"                 # "auto" | "unpack" | "lut"
     route_constants: RouteConstants = dataclasses.field(
         default_factory=RouteConstants)
     routes: dict | None = None          # resolved: layer path -> route
@@ -184,7 +184,9 @@ def plan_route_tables(folded, cfg: SpikformerConfig, *, batch_size: int,
                       build_tables: bool = True,
                       constants: RouteConstants | None = None,
                       routes: dict | None = None,
-                      layer_occupancy: dict | None = None):
+                      layer_occupancy: dict | None = None,
+                      force: str | None = None,
+                      pallas: bool = False):
     """Pass 3 — per-layer matmul route planning: the byte-LUT's precompute.
 
     For every folded layer this computes the packed-route matmul shape
@@ -212,6 +214,15 @@ def plan_route_tables(folded, cfg: SpikformerConfig, *, batch_size: int,
     "lut_sparse" pin without the occupancy that produced it is an error,
     not a silent densification.
 
+    ``pallas=True`` plans for the Pallas kernel branch: the heuristic is
+    ``choose_pallas_route`` (the one-hot-gather vs in-register-dot cost
+    model with its own constants) and its "lut" tables feed the VMEM
+    gather kernel. ``force`` (what ``plan.route == "lut"`` sets) pins that
+    route on EVERY layer instead of consulting the heuristic — the
+    bit-exactness pin for float32 weights on the Pallas branch, where the
+    unpack-dot kernel is reduction-order-tolerant. Pinned ``routes``
+    always win over both (a committed plan replays verbatim).
+
     Returns ``(annotated_tree, plan)`` with ``plan`` mapping layer paths
     to routes.
     """
@@ -220,6 +231,7 @@ def plan_route_tables(folded, cfg: SpikformerConfig, *, batch_size: int,
     m_tok = batch_size * cfg.tokens
     plan = {}
     occ_map = layer_occupancy or {}
+    choose = choose_pallas_route if pallas else choose_route
 
     def shapes_for(path):
         """Packed-route matmul shape (m, live planes, groups) at ``path``."""
@@ -235,12 +247,12 @@ def plan_route_tables(folded, cfg: SpikformerConfig, *, batch_size: int,
         if routes is None:
             m, tt, gg = shapes_for(path)
             k, n = wq.shape
-            route = choose_route(m=m, k=k, n=n, g=gg, t=tt,
-                                 weights_are_int=jnp.issubdtype(
-                                     wq.dtype, jnp.integer),
-                                 max_table_bytes=max_table_bytes,
-                                 constants=constants,
-                                 occupancy=occ_map.get(path))
+            is_int = jnp.issubdtype(wq.dtype, jnp.integer)
+            route = force or choose(m=m, k=k, n=n, g=gg, t=tt,
+                                    weights_are_int=is_int,
+                                    max_table_bytes=max_table_bytes,
+                                    constants=constants,
+                                    occupancy=occ_map.get(path))
         else:
             try:
                 route = routes[path]
@@ -504,13 +516,19 @@ def compile(params, cfg: SpikformerConfig, plan: ExecutionPlan | None = None,
     tree, weight_dtype = quantize_weights(tree, plan.weight_dtype)
     check_dtype(weight_dtype)             # dtype=None resolved from the tree
 
-    if plan.route == "auto":
+    if plan.route in ("auto", "lut"):
+        # plan for the branch the backend will actually execute: a Pallas
+        # backend (pinned, or auto-selected on TPU) routes via the Pallas
+        # cost model and consumes real tables in its gather kernels
+        is_pallas = use_pallas(getattr(backend, "pallas", False))
         tree, routes = plan_route_tables(
             tree, cfg, batch_size=plan.plan_batch,
             max_table_bytes=plan.max_table_bytes,
             build_tables=registry.wants_lut_tables(plan.backend, backend),
             constants=plan.route_constants, routes=plan.routes,
-            layer_occupancy=plan.layer_occupancy)
+            layer_occupancy=plan.layer_occupancy,
+            force="lut" if plan.route == "lut" else None,
+            pallas=is_pallas)
     else:
         # the pin must hold even for a pre-annotated folded tree: stale
         # "lut" leaves would silently keep the LUT route alive

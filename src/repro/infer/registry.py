@@ -16,9 +16,13 @@ Capabilities:
 
 * ``weight_dtypes`` — which ``ExecutionPlan.weight_dtype`` values the
   backend's kernels execute; ``compile()`` rejects a plan outside the set.
-* ``device_kinds`` — JAX platform names the backend is built for
-  (informational + ``list_backends(device_kind=...)`` filtering; not a hard
-  gate, because every backend here also runs in interpret/oracle mode).
+* ``device_kinds`` — JAX platform names the backend is built for.
+  ``get_backend`` enforces this against the current JAX platform: asking
+  for a TPU-only backend on a CPU host fails up front with the available
+  platforms named, instead of tracing kernels that cannot lower. Passing
+  ``interpret=True`` in the options is the explicit escape hatch — every
+  backend here also runs in Pallas interpret/oracle mode, which is exactly
+  how tier-1 exercises the ``packed_pallas`` kernels on CPU.
 * ``wants_lut_tables`` — whether the route planner should build and cache
   the (C, 256, N) byte-LUT tables into this backend's folded tree, or only
   flag planned layers. ``None`` defers to the backend *instance* (the
@@ -129,10 +133,31 @@ def get_backend(name, **options):
     """Backend *instance* by registered name; instances pass through
     (callers may hand ``compile()``/``InferenceSession`` a pre-built
     backend). ``options`` go to the factory — unknown keys are the
-    factory's problem, by design."""
+    factory's problem, by design.
+
+    The spec's ``device_kinds`` is enforced here: a backend built for
+    hardware this host does not have fails loudly, naming the platforms
+    that ARE available and the ``interpret=True`` escape hatch that runs
+    its kernels under the Pallas interpreter instead (the tier-1 testing
+    mode). The hatch is an explicit opt-in so nobody mistakes interpreted
+    timings for the real thing.
+    """
     if not isinstance(name, str):
         return name
-    return backend_spec(name).make(**options)
+    spec = backend_spec(name)
+    if not options.get("interpret"):
+        import jax
+        platform = jax.default_backend()
+        if platform not in spec.device_kinds:
+            available = sorted({d.platform for d in jax.devices()})
+            raise ValueError(
+                f"backend {spec.name!r} targets device kind(s) "
+                f"{sorted(spec.device_kinds)} but the current JAX platform "
+                f"is {platform!r} (available: {available}); pass "
+                "backend_options={'interpret': True} to run its Pallas "
+                "kernels in interpret mode on this host (bit-exact, "
+                "test-speed only)")
+    return spec.make(**options)
 
 
 def wants_lut_tables(name_or_instance, backend) -> bool:

@@ -245,6 +245,29 @@ def lut_matmul_sparse(idx, table, *, max_chunks: int,
     return lax.cond(nnz_max <= max_chunks, gather_sparse, gather_dense, None)
 
 
+def lut_matmul_pallas(idx, table, *, bm: int = 128, bn: int = 128,
+                      bc: int = 32, interpret: bool = True):
+    """Pallas byte-LUT matmul: (..., C) index bytes x (C, 256, N) table ->
+    (..., N) f32, same contract as ``lut_matmul`` but executed by the
+    grouped-grid Pallas kernel (``spike_matmul.lut_gather_matmul``) with
+    the table VMEM-resident. Bit-exact against ``lut_matmul`` — the kernel
+    replays the identical defined ascending-chunk fold with the identical
+    accumulator dtypes. The first input axis is treated as the plane axis
+    (the outermost grid dim); remaining lead axes fold into the row dim.
+    """
+    from .spike_matmul import lut_gather_matmul
+    c = table.shape[0]
+    assert idx.shape[-1] == c, (idx.shape, table.shape)
+    lead = idx.shape[:-1]
+    if idx.ndim == 2:
+        idx3 = idx[None]                               # (1, M, C)
+    else:
+        idx3 = idx.reshape(idx.shape[0], -1, c)        # (P, M, C)
+    y = lut_gather_matmul(idx3, table, bm=bm, bn=bn, bc=bc,
+                          interpret=interpret)
+    return y.reshape(*lead, table.shape[-1])
+
+
 def lut_matmul_planes(planes, w):
     """The route's bit-exact oracle on unpacked planes: (R, M, K) {0,1}
     float32 x (K, N) -> (R, M, N) f32 via the IDENTICAL reduction tree as
@@ -308,6 +331,10 @@ class RouteConstants:
     compact_cost: float = 40.0   # sparse route: per (index byte x slot)
                                  # compaction element (cumsum + one-hot
                                  # select; N-independent, int32-bound)
+    pallas_gather_cost: float = 2.0  # pallas route: per gathered table
+                                     # element (one-hot MXU select row)
+    pallas_dot_cost: float = 1.0     # pallas route: per unpack-dot FMA
+                                     # (8 planes folded into one MXU dot)
 
     def to_dict(self) -> dict:
         return dataclasses.asdict(self)
@@ -371,3 +398,35 @@ def choose_route(*, m: int, k: int, n: int, g: int, t: int,
             if sparse_cost < lut_cost and sparse_cost < unpack_cost:
                 return "lut_sparse"
     return "lut" if lut_cost < unpack_cost else "unpack"
+
+
+def choose_pallas_route(*, m: int, k: int, n: int, g: int, t: int,
+                        weights_are_int: bool = False,
+                        max_table_bytes: int = MAX_TABLE_BYTES,
+                        constants: RouteConstants | None = None,
+                        occupancy: float | None = None) -> str:
+    """Pick "lut" or "unpack" for the Pallas backend's packed matmul.
+
+    The Pallas kernel pair differs from the CPU routes in kind, so the
+    cost model does too: the LUT route's gather is a (bm, 256) one-hot MXU
+    select per chunk (``spike_matmul.gather256``) against a VMEM-resident
+    table — t*M*C*N selected elements plus the G*M*K bit transpose that
+    builds the index bytes — while the unpack route folds all 8 planes of
+    a group into the row dim of one MXU dot (t*M*K*N FMAs, no unpack
+    writes: the bits expand in-register inside the kernel). The constants
+    (``pallas_gather_cost`` / ``pallas_dot_cost``) are host/device
+    properties; ``scripts/autotune_routes.py --pallas`` refits them.
+
+    ``occupancy`` is accepted for signature parity with ``choose_route``
+    and ignored: the dense Pallas gather has no zero-chunk skipping (a
+    pinned "lut_sparse" route runs the dense Pallas gather, which is
+    bitwise identical). There is no sparse candidate to weigh.
+    """
+    cc = DEFAULT_ROUTE_CONSTANTS if constants is None else constants
+    c = num_k_chunks(k)
+    if table_bytes(k, n, weights_are_int) > max_table_bytes:
+        return "unpack"
+    lut_cost = (t * m * c * n * cc.pallas_gather_cost
+                + g * m * k * cc.transpose_cost)
+    dot_cost = t * m * k * n * cc.pallas_dot_cost
+    return "lut" if lut_cost < dot_cost else "unpack"

@@ -20,8 +20,9 @@ import jax.numpy as jnp
 from . import ref
 from . import lut_matmul as lut
 from .lut_matmul import (  # noqa: F401  (re-export: the dispatch heuristic)
-    RouteConstants, choose_route)
+    RouteConstants, choose_pallas_route, choose_route)
 from .spike_matmul import spike_matmul as _spike_matmul_pallas
+from .fused import tflif_lut_matmul as _tflif_lut_pallas
 from .tflif import tflif_fused as _tflif_pallas
 from .stdp_attention import stdp_attention as _stdp_pallas
 from .flash_attention import flash_attention as _flash_pallas
@@ -58,6 +59,40 @@ def _resolve_route(route, table, *, m, k, n, g, t, weights_are_int,
                          "occupancy (the static gather budget comes from "
                          "it); measure with infer.backends.chunk_occupancy")
     return route
+
+
+def _have_table(table) -> bool:
+    """A real (C, 256, N) table vs None or a planner boolean flag. The
+    flag case (``lut=True``, what ``build_tables=False`` annotates for
+    backends that never gather) appears as a traced 0-d bool under jit —
+    ``ndim == 3`` separates it from an actual table either way."""
+    return table is not None and getattr(table, "ndim", 0) == 3
+
+
+def _resolve_route_pallas(route, table, *, m, k, n, g, t, weights_are_int,
+                          constants=None):
+    """Route resolution for the Pallas branch: "lut" (the byte-LUT gather
+    kernel over a VMEM-resident table) or "unpack" (the grouped
+    unpack-in-register dot kernel).
+
+    Mirrors ``_resolve_route``'s contract with two Pallas-specific rules:
+    "auto" consults ``choose_pallas_route`` (its own cost model — one-hot
+    MXU selects vs in-register plane dots have different constants than
+    the CPU gather vs unpack-and-write), and a pinned "lut_sparse" runs
+    the DENSE Pallas gather — there is no zero-chunk-skipping kernel, and
+    the dense fold is bitwise identical to the sparse one by construction,
+    so replaying a CPU-calibrated sparse plan on the Pallas backend is
+    exact, just not sparse.
+    """
+    if route is None:
+        return "lut" if _have_table(table) else "unpack"
+    if route == "auto":
+        return choose_pallas_route(m=m, k=k, n=n, g=g, t=t,
+                                   weights_are_int=weights_are_int,
+                                   constants=constants)
+    if route not in ("lut", "lut_sparse", "unpack"):
+        raise ValueError(f"unknown packed-matmul route {route!r}")
+    return "lut" if route == "lut_sparse" else route
 
 
 def on_tpu() -> bool:
@@ -163,8 +198,12 @@ def spike_linear(x_packed, w, bias=None, *, t: int,
         bit j of group g = the timestep-(8g+j) spike of that neuron.
       w: (K, N) weights; bias: optional (N,) added to every timestep.
       t: number of live timesteps (bits past t-1 must be zero).
-      pallas: backend override (the Pallas branch ignores ``route``).
-      route: CPU-route selection — None (LUT iff ``table`` given, sparse
+      pallas: backend override. The Pallas branch honors ``route`` through
+        ``_resolve_route_pallas``: "lut" runs the VMEM-table gather kernel
+        (``lut_matmul_pallas``), "unpack" the grouped in-register dot
+        kernel, "auto" the ``choose_pallas_route`` cost model, and a
+        pinned "lut_sparse" the dense gather (bitwise identical).
+      route: route selection — None (LUT iff ``table`` given, sparse
         LUT iff additionally ``occupancy`` given, else the unpack oracle),
         "auto" (the ``choose_route`` heuristic), or a forced "lut" /
         "lut_sparse" / "unpack".
@@ -188,8 +227,11 @@ def spike_linear(x_packed, w, bias=None, *, t: int,
       reference backend emulates for planned layers) and the sparse LUT
       route additionally skips zero index bytes (still bit-exact — the
       skipped ``table[c, 0, :]`` entry is the exact-zero identity). The
-      Pallas route runs the grouped kernel, one weight fetch per group of
-      8 planes.
+      Pallas LUT route replays the same defined gather fold in-kernel
+      (bit-exact against the CPU LUT route and its oracle); the Pallas
+      unpack route runs the grouped dot kernel, one weight fetch per group
+      of 8 planes (bit-exact for integer weights, reduction-order-
+      tolerant for float32 — pin "lut" routes for float bit-exactness).
     """
     g = x_packed.shape[0]
     assert g == num_plane_groups(t), (g, t)
@@ -198,16 +240,29 @@ def spike_linear(x_packed, w, bias=None, *, t: int,
     for d in lead:
         m *= d
     n = w.shape[-1]
-    resolved = (None if use_pallas(pallas) else _resolve_route(
+    if use_pallas(pallas):
+        resolved = _resolve_route_pallas(
+            route, table, m=m, k=k, n=n, g=g, t=t,
+            weights_are_int=lut._is_int_kernel(w),
+            constants=route_constants)
+        x2 = x_packed.reshape(g, -1, k)
+        if resolved == "lut":
+            tbl = table if _have_table(table) else lut.build_lut(w)
+            idx = lut.plane_indices(x2)[:t]                # (t, M, C)
+            per = lut.lut_matmul_pallas(idx, tbl,
+                                        interpret=not on_tpu())
+        else:
+            per8 = _spike_matmul_pallas(x2, w, mode="per_plane",
+                                        interpret=not on_tpu(), **blocks)
+            per = per8.reshape(g * 8, m, n)[:t]            # (t, M, N)
+        if bias is not None:
+            per = per + bias.astype(per.dtype)
+        return per.reshape((t, *lead, n))
+    resolved = _resolve_route(
         route, table, m=m, k=k, n=n, g=g, t=t,
         weights_are_int=lut._is_int_kernel(w),
-        constants=route_constants, occupancy=occupancy))
-    if use_pallas(pallas):
-        x2 = x_packed.reshape(g, -1, k)
-        per8 = _spike_matmul_pallas(x2, w, mode="per_plane",
-                                    interpret=not on_tpu(), **blocks)
-        per = per8.reshape(g * 8, m, n)[:t]                # (t, M, N)
-    elif resolved in ("lut", "lut_sparse"):
+        constants=route_constants, occupancy=occupancy)
+    if resolved in ("lut", "lut_sparse"):
         tbl = lut.build_lut(w) if table is None else table
         idx = lut.plane_indices(x_packed)[:t]              # (t, ..., C)
         if resolved == "lut_sparse":
@@ -255,14 +310,28 @@ def sssc_linear(x_u8, w, bias=None, *, pallas: bool | None = None,
     x2 = x_u8.reshape(-1, k)
     m = x2.shape[0]
     n = w.shape[-1]
-    resolved = (None if use_pallas(pallas) else _resolve_route(
+    if use_pallas(pallas):
+        resolved = _resolve_route_pallas(
+            route, table, m=m, k=k, n=n, g=1, t=8,
+            weights_are_int=lut._is_int_kernel(w),
+            constants=route_constants)
+        if resolved == "lut":
+            tbl = table if _have_table(table) else lut.build_lut(w)
+            idx = lut.plane_indices(x2[None])              # (8, M, C)
+            per = lut.lut_matmul_pallas(idx, tbl,
+                                        interpret=not on_tpu())
+            y = lut.shift_sum_fold(per)                    # (M, N)
+        else:
+            y = _spike_matmul_pallas(x2, w, mode="shift_sum",
+                                     interpret=not on_tpu(), **blocks)
+        if bias is not None:
+            y = y + bias.astype(y.dtype)
+        return y.reshape((*lead, n))
+    resolved = _resolve_route(
         route, table, m=m, k=k, n=n, g=1, t=8,
         weights_are_int=lut._is_int_kernel(w),
-        constants=route_constants, occupancy=occupancy))
-    if use_pallas(pallas):
-        y = _spike_matmul_pallas(x2, w, mode="shift_sum",
-                                 interpret=not on_tpu(), **blocks)
-    elif resolved in ("lut", "lut_sparse"):
+        constants=route_constants, occupancy=occupancy)
+    if resolved in ("lut", "lut_sparse"):
         tbl = lut.build_lut(w) if table is None else table
         idx = lut.plane_indices(x_u8[None])                # (8, ..., C)
         if resolved == "lut_sparse":
@@ -321,6 +390,55 @@ def tflif_pack(acc, bias=None, *, t: int | None = None, tau: float = 2.0,
         v_th = jnp.broadcast_to(v_th, lead).reshape(-1)
     packed = tflif_fused(x2, bias, tau=tau, v_th=v_th, pallas=pallas)
     return packed.reshape((packed.shape[0], *lead))
+
+
+def tflif_lut(acc, bias=None, *, table, v_th=1.0, t: int | None = None,
+              tau: float = 2.0, pallas: bool | None = None):
+    """Fused LIF -> pack -> byte-LUT matmul over a producer/consumer pair
+    (the MLP fc1 -> fc2 step).
+
+    Args:
+      acc: (T, ..., K) f32 producer pre-LIF accumulators (producer bias
+        NOT added — it goes through ``bias`` into the LIF charge, exactly
+        as ``tflif_pack``). The trailing axis is the producer's channel
+        dim = the consumer's contraction dim.
+      bias: producer bias, None / scalar / (K,); v_th: producer threshold,
+        scalar or (K,) (the int8 scale fold).
+      table: (C, 256, N) consumer ``build_lut`` table — a REAL table, the
+        fused step is a gather by definition.
+      t: live timesteps (defaults to acc.shape[0]).
+
+    Returns:
+      ``(spikes, acc2)``: spikes (G, ..., K) uint8 packed producer output
+      (what the unfused route would have written between the layers) and
+      acc2 (t, ..., N) f32 consumer pre-LIF accumulators (consumer bias
+      not added). The Pallas branch runs the single fused kernel
+      (``kernels.fused.tflif_lut_matmul``); the CPU branch composes the
+      same math from ``tflif_pack`` + ``plane_indices`` + ``lut_matmul``
+      — both bit-exact against each other, so the fused step never
+      changes logits, only traffic.
+    """
+    if not _have_table(table):
+        raise ValueError("tflif_lut requires a real (C, 256, N) table — "
+                         "the fused step is a gather by definition; build "
+                         "one with lut_matmul.build_lut")
+    if t is not None and t != acc.shape[0]:
+        acc = acc[:t]
+    t = acc.shape[0]
+    lead, k = acc.shape[1:-1], acc.shape[-1]
+    n = table.shape[-1]
+    if use_pallas(pallas):
+        x2 = acc.reshape(t, -1, k)
+        b = None if bias is None else jnp.broadcast_to(
+            jnp.asarray(bias, jnp.float32), (k,))
+        vth = jnp.broadcast_to(jnp.asarray(v_th, jnp.float32), (k,))
+        spikes, acc2 = _tflif_lut_pallas(x2, b, table, v_th=vth, tau=tau,
+                                         interpret=not on_tpu())
+        return (spikes.reshape(spikes.shape[0], *lead, k),
+                acc2.reshape(t, *lead, n))
+    spikes = tflif_pack(acc, bias, tau=tau, v_th=v_th, pallas=pallas)
+    idx = lut.plane_indices(spikes)[:t]                    # (t, ..., C)
+    return spikes, lut.lut_matmul(idx, table)
 
 
 STDP_LUT_MIN_TOKENS = 128  # below this, score-table build cost can't amortize

@@ -28,6 +28,7 @@ import functools
 
 import jax
 import jax.numpy as jnp
+from jax import lax
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
@@ -122,6 +123,103 @@ def spike_matmul(x_packed, w, *, mode: str = "per_plane",
     if mode == "per_plane":
         return y[:, :m, :n]
     return y[:m, :n]
+
+
+def gather256(tbl_c, idx_col, acc_dtype):
+    """Gather one LUT chunk inside a kernel: ``tbl_c`` (256, bn) partial
+    sums, ``idx_col`` (bm,) uint8 index bytes -> (bm, bn) gathered rows.
+
+    Implemented as a one-hot matmul rather than a dynamic gather — the MXU
+    has no gather unit, but a (bm, 256) one-hot against the VMEM-resident
+    table IS the multiplexer select of VESTA's PE, and it is *exact in any
+    reduction order*: 255 of the 256 products per output element are exact
+    zeros (0 * v and 1 * v are both exact in IEEE), so the sum equals the
+    selected table entry bit for bit regardless of how the hardware
+    associates it (up to the sign of a zero, which ``==`` ignores).
+    Integer tables accumulate in int32, exactly as the CPU gather.
+    """
+    iota = lax.broadcasted_iota(jnp.int32, (idx_col.shape[0], 256), 1)
+    onehot = (idx_col.astype(jnp.int32)[:, None] == iota).astype(acc_dtype)
+    return lax.dot_general(onehot, tbl_c.astype(acc_dtype),
+                           (((1,), (0,)), ((), ())),
+                           preferred_element_type=acc_dtype)
+
+
+def _lut_kernel(idx_ref, tbl_ref, o_ref, acc_ref, *, nc: int, bc: int):
+    """idx_ref: (1, bm, bc) uint8 per-plane index bytes; tbl_ref:
+    (bc, 256, bn) chunk-partial-sum table tile in VMEM; o_ref: (1, bm, bn)
+    f32; acc_ref: (bm, bn) f32/int32 scratch. Chunk tiles are visited
+    ascending (innermost grid dim), and within a tile the fold is a static
+    ascending python loop — together they replay ``lut_matmul``'s defined
+    ascending-chunk reduction tree exactly."""
+    c_step = pl.program_id(3)
+
+    @pl.when(c_step == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    idx = idx_ref[0]                    # (bm, bc)
+    acc = acc_ref[...]
+    for cc in range(bc):                # static unroll: the defined fold
+        acc = acc + gather256(tbl_ref[cc], idx[:, cc], acc.dtype)
+    acc_ref[...] = acc
+
+    @pl.when(c_step == nc - 1)
+    def _done():
+        o_ref[...] = acc_ref[...].astype(jnp.float32)[None]
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bc", "interpret"))
+def lut_gather_matmul(idx, table, *, bm: int = 128, bn: int = 128,
+                      bc: int = 32, interpret: bool = True):
+    """Pallas byte-LUT matmul: (P, M, C) uint8 per-plane index bytes x
+    (C, 256, N) chunk-partial-sum table -> (P, M, N) f32 accumulators.
+
+    The grid (P, M/bm, N/bn, C/bc) extends ``_spike_matmul_grouped``'s
+    plane-group structure: the plane axis is outermost so one (bc, 256, bn)
+    table tile streamed into VMEM serves every plane before the grid
+    advances — the table is the stationary operand, exactly the paper's
+    weight-stationary PE with the 8-row chunk partial sums precomputed.
+    Reduction follows ``lut_matmul``'s defined ascending-chunk fold (chunk
+    tiles ascend in the innermost grid dim, a static ascending unroll
+    inside each tile), with int32 accumulation for int16 tables, so the
+    result is bit-exact against the CPU gather route and its
+    ``lut_matmul_planes`` float oracle.
+
+    Padding: M pads with zero index bytes (they gather the exact-zero
+    ``table[c, 0, :]`` entry), N pads the table with zero columns, C pads
+    the table with all-zero chunks — all are exact-identity adds, sliced
+    off on return.
+    """
+    p, m, c = idx.shape
+    c2, _, n = table.shape
+    assert c == c2, (idx.shape, table.shape)
+    bm_, bn_, bc_ = min(bm, m), min(bn, n), min(bc, c)
+    pm, pn, pc = (-m) % bm_, (-n) % bn_, (-c) % bc_
+    if pm or pc:
+        idx = jnp.pad(idx, ((0, 0), (0, pm), (0, pc)))
+    if pc or pn:
+        table = jnp.pad(table, ((0, pc), (0, 0), (0, pn)))
+    mp, cp = idx.shape[1:]
+    np_ = table.shape[-1]
+    grid = (p, mp // bm_, np_ // bn_, cp // bc_)
+    acc_dtype = (jnp.int32 if jnp.issubdtype(table.dtype, jnp.integer)
+                 else jnp.float32)
+
+    y = pl.pallas_call(
+        functools.partial(_lut_kernel, nc=grid[3], bc=bc_),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bm_, bc_), lambda pp, i, j, cc: (pp, i, cc)),
+            pl.BlockSpec((bc_, 256, bn_), lambda pp, i, j, cc: (cc, 0, j)),
+        ],
+        out_specs=pl.BlockSpec((1, bm_, bn_),
+                               lambda pp, i, j, cc: (pp, i, j)),
+        out_shape=jax.ShapeDtypeStruct((p, mp, np_), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bm_, bn_), acc_dtype)],
+        interpret=interpret,
+    )(idx, table)
+    return y[:, :m, :n]
 
 
 def _spike_matmul_grouped(x_packed, w, *, bm: int, bn: int, bk: int,

@@ -31,6 +31,20 @@ TAU = 2.0
 V_TH = 1.0
 
 
+def lif_charge_fire(v, x_t, bias, v_th, *, tau: float):
+    """One in-kernel LIF timestep: charge, compare, hard-reset.
+
+    Returns ``(v_next, spike_bool)``. This is the single arithmetic
+    definition both the standalone TFLIF kernel and the fused
+    pack->TFLIF->matmul kernel (``kernels.fused``) execute — extracting it
+    keeps the two bit-identical to each other and to ``ref.tflif_ref``
+    (same op sequence: ``(x + bias) - v`` first, one divide by tau).
+    """
+    h = v + (x_t + bias - v) / tau
+    s = h >= v_th
+    return jnp.where(s, 0.0, h), s     # hard reset; v crosses group bounds
+
+
 def _kernel(x_ref, b_ref, vth_ref, o_ref, *, t_steps: int, tau: float):
     """x_ref: (T, bm); b_ref, vth_ref: (bm,); o_ref: (G, bm) uint8 packed."""
     bias = b_ref[...]
@@ -41,9 +55,7 @@ def _kernel(x_ref, b_ref, vth_ref, o_ref, *, t_steps: int, tau: float):
     for g in range(groups):            # static unroll: T lives in VREGs
         packed = jnp.zeros(x_ref.shape[1:], jnp.uint8)
         for j in range(min(8, t_steps - 8 * g)):
-            h = v + (x_ref[8 * g + j] + bias - v) / tau
-            s = (h >= v_th)
-            v = jnp.where(s, 0.0, h)   # hard reset; v crosses group bounds
+            v, s = lif_charge_fire(v, x_ref[8 * g + j], bias, v_th, tau=tau)
             packed = packed | (s.astype(jnp.uint8) << jnp.uint8(j))
         out.append(packed)
     o_ref[...] = jnp.stack(out)

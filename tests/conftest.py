@@ -1,3 +1,5 @@
+import collections
+import json
 import os
 import sys
 
@@ -10,6 +12,30 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 import jax  # noqa: E402
 import numpy as np  # noqa: E402
 import pytest  # noqa: E402
+
+# Per-route parity pass counts (tests/test_parity.py records into this via
+# the ``parity_pass`` fixture). When $PARITY_SUMMARY names a file, the
+# counts are dumped there as JSON at session end — scripts/tier1.sh merges
+# them into tier1_summary.json and the CI step summary, so a sweep that
+# silently stopped covering a route shows up as a dropped counter, not a
+# green run.
+_PARITY_PASSES = collections.Counter()
+
+
+@pytest.fixture
+def parity_pass():
+    """Record passed parity checks: call with ``{"route-key": n}`` (or any
+    Counter-updatable) AFTER the assertions they count have passed."""
+    return _PARITY_PASSES.update
+
+
+def pytest_sessionfinish(session, exitstatus):
+    path = os.environ.get("PARITY_SUMMARY")
+    if path and _PARITY_PASSES:
+        with open(path, "w") as f:
+            json.dump({"parity_passes": dict(sorted(_PARITY_PASSES.items()))},
+                      f, indent=1, sort_keys=True)
+            f.write("\n")
 
 
 @pytest.fixture

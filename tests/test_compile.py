@@ -96,33 +96,53 @@ def test_packed_pallas_backend_registered_and_compiles(small):
     """The registration path the registry docstring promises, exercised
     end-to-end: "packed_pallas" (alias "pallas") resolves through
     ``compile()`` to a Pallas-pinned PackedBackend, declares TPU device
-    kind, and — capability-declared, no instance interrogation — skips
-    the (C,256,N) gather-table build: LUT-planned layers carry the cheap
-    boolean flag, not tables."""
+    kind (enforced: a CPU host needs the interpret escape hatch), and —
+    capability-declared — gets REAL (C,256,N) gather tables built into
+    its LUT-planned layers: the Pallas byte-LUT kernel consumes them from
+    VMEM."""
     cfg, params, _ = small
     spec = backend_spec("packed_pallas")
     assert backend_spec("pallas").name == "packed_pallas"   # alias resolves
     assert spec.device_kinds == ("tpu",)
-    assert spec.wants_lut_tables is False
+    assert spec.wants_lut_tables is True
     assert "packed_pallas" in list_backends(device_kind="tpu")
     assert "packed_pallas" not in list_backends(device_kind="cpu")
 
-    model = infer_compile(params, cfg, ExecutionPlan(backend="pallas",
-                                                     batch_buckets=(2,)))
+    model = infer_compile(params, cfg,
+                          ExecutionPlan(backend="pallas", batch_buckets=(2,),
+                                        backend_options={"interpret": True}))
     assert model.backend.pallas is True
-    assert model.plan.routes                   # planning still ran
+    assert model.plan.routes                   # planning ran
     luts = [p for p, r in model.plan.routes.items() if r == "lut"]
+    assert luts                                # pallas cost model picks LUTs
     for path in luts:
         layer = model.folded
         for p in path.split("/"):
             layer = layer[p]
-        assert layer["lut"] is True            # flag, never a table
+        assert layer["lut"].ndim == 3          # a real table, not a flag
+        assert layer["lut"].shape[1] == 256
     # the pin is real: a pallas=False override is rejected at the door
-    # (it would run the CPU gather route against boolean table flags)
+    # (this registration IS the Pallas pin; "packed" is the CPU route)
     with pytest.raises(ValueError, match="pins pallas=True"):
         infer_compile(params, cfg,
                       ExecutionPlan(backend="pallas",
-                                    backend_options={"pallas": False}))
+                                    backend_options={"pallas": False,
+                                                     "interpret": True}))
+
+
+def test_pallas_backend_device_gate_names_escape_hatch(small):
+    """Asking for the TPU-only backend on this CPU host fails up front,
+    naming the backend's device kinds, the available platforms, and the
+    ``interpret`` escape hatch — not deep inside a kernel trace."""
+    cfg, params, _ = small
+    if jax.default_backend() == "tpu":
+        pytest.skip("device gate only fires off-TPU")
+    with pytest.raises(ValueError) as ei:
+        infer_compile(params, cfg, ExecutionPlan(backend="packed_pallas"))
+    msg = str(ei.value)
+    assert "'packed_pallas'" in msg and "tpu" in msg
+    assert jax.default_backend() in msg        # what this host has
+    assert "interpret" in msg                  # and the way out
 
 
 def test_unknown_backend_name_errors(small):
@@ -195,6 +215,32 @@ def test_compiled_plan_roundtrip_reproduces_route_plan(small):
     m2 = infer_compile(params, cfg, ExecutionPlan.from_json(m1.plan.to_json()))
     assert m2.plan.routes == m1.plan.routes
     exact(m1.logits(img), m2.logits(img))
+
+
+def test_pallas_plan_json_roundtrip_replays_pinned_routes(small):
+    """A pallas-compiled plan is a committable artifact: its JSON
+    round-trips with the routes pinned, recompiling from it replays the
+    same per-layer routes through the Pallas kernels with bit-identical
+    logits — and the same plan stripped of its ``interpret`` escape hatch
+    fails loudly on a host without the backend's device, instead of
+    quietly serving through some other backend."""
+    cfg, params, img = small
+    cfg = dataclasses.replace(cfg, depth=1)
+    params1 = init(jax.random.PRNGKey(0), cfg)
+    m1 = infer_compile(params1, cfg,
+                       ExecutionPlan(backend="packed_pallas",
+                                     batch_buckets=(2,),
+                                     backend_options={"interpret": True}))
+    plan2 = ExecutionPlan.from_json(m1.plan.to_json())
+    assert plan2.backend == "packed_pallas"
+    assert plan2.routes == m1.plan.routes and plan2.routes
+    m2 = infer_compile(params1, cfg, plan2)
+    assert m2.plan.routes == m1.plan.routes    # replayed, not re-derived
+    exact(m1.logits(img[:2]), m2.logits(img[:2]))
+    if jax.default_backend() != "tpu":
+        bare = dataclasses.replace(plan2, backend_options={})
+        with pytest.raises(ValueError, match="interpret"):
+            infer_compile(params1, cfg, bare)
 
 
 def test_pinned_routes_reject_foreign_config(small):

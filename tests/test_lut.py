@@ -333,21 +333,36 @@ def test_route_unpack_strips_stale_lut_annotations():
     exact(pinned.logits(img), fresh.logits(img))
 
 
-def test_reference_and_pallas_sessions_skip_table_build():
-    """Backends that never gather (the float reference; a Pallas-pinned
-    packed session) get a cheap boolean plan flag, not (C,256,N) tables."""
+def test_reference_skips_and_pallas_builds_tables():
+    """The table capability follows who gathers: the float reference never
+    does (its LUT layers carry a cheap boolean plan flag), while a
+    Pallas-pinned packed session DOES — its byte-LUT kernel gathers the
+    (C,256,N) tables from VMEM, so planning must build them."""
     cfg = SpikformerConfig().scaled()
     params = init(jax.random.PRNGKey(0), cfg)
     ref = InferenceSession(params, cfg, backend="reference", batch_size=2)
     pal = InferenceSession(params, cfg, backend="packed", batch_size=2,
                            pallas=True, jit=False)
-    for sess in (ref, pal):
+
+    def lut_layers(sess):
         for path, route in sess.plan.items():
             if route == "lut":
                 layer = sess.folded
                 for p in path.split("/"):
                     layer = layer[p]
-                assert layer["lut"] is True
+                yield layer
+
+    seen = 0
+    for layer in lut_layers(ref):
+        assert layer["lut"] is True            # flag, never a table
+        seen += 1
+    assert seen
+    seen = 0
+    for layer in lut_layers(pal):
+        assert layer["lut"].ndim == 3          # a real gather table
+        assert layer["lut"].shape[1] == 256
+        seen += 1
+    assert seen
 
 
 def test_compare_bench_gate():
