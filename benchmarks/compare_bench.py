@@ -13,7 +13,10 @@ smoke, full vs full — timings across configs are not comparable):
     and the geomean absorbs.
   * occupancy-sweep and pallas-sweep rows must each stay bit-exact and
     non-lossy vs the baseline (pallas timings are interpret-mode on CPU
-    hosts and are never compared — only exactness and row presence gate).
+    hosts and are never compared — only exactness and row presence gate);
+  * serving-under-load rows are non-lossy keyed by (rps, replicas) with
+    zero dropped-but-accepted requests; paced fleet rows additionally
+    gate SLO attainment 1.0 and 1->2 replica goodput scaling >= 1.5.
 
   PYTHONPATH=src python benchmarks/compare_bench.py current.json \
       [--baseline BENCH_infer.json] [--min-ratio 0.4]
@@ -128,28 +131,52 @@ def compare(current: dict, baseline: dict, *, min_ratio: float):
                         "current record lost them")
     # serving-under-load rows (open-loop goodput/p99/SLO — absolute numbers
     # are runner noise, but the rows must survive AND keep the zero-drop
-    # contract: an accepted request is a promise)
+    # contract: an accepted request is a promise). Runtime rows carry no
+    # "replicas" field; fleet rows do, plus pace_fps and goodput_scaling.
+    def load_key(s):
+        return (s["rps"], s.get("replicas"))
+
+    fleet_scaling = {}
     for s in current.get("serving_load", []):
         p99 = s.get("latency_p99_s")
         p99_us = "n/a" if p99 is None else f"{p99 * 1e6:.0f}us"
-        print(f"serving_load rps={s['rps']:g}: goodput "
+        tag = ("" if s.get("replicas") is None
+               else f" replicas={s['replicas']}"
+                    f" pace={s.get('pace_fps')}")
+        print(f"serving_load rps={s['rps']:g}{tag}: goodput "
               f"{s['goodput_fps']:.1f} fps, p99 {p99_us}, "
               f"slo_attainment {s.get('slo_attainment')}, "
               f"rejected {s.get('requests_rejected')}, "
               f"dropped {s.get('requests_dropped')}")
         if s.get("requests_dropped", 0):
             failures.append(
-                f"serving_load rps={s['rps']:g} dropped "
+                f"serving_load {load_key(s)} dropped "
                 f"{s['requests_dropped']} accepted request(s)")
-    if baseline.get("serving_load") and not current.get("serving_load"):
-        failures.append("baseline has serving-under-load rows but the "
-                        "current record lost them")
-    elif baseline.get("serving_load") and len(current.get("serving_load", [])) \
-            < len(baseline["serving_load"]):
+        if s.get("replicas") is not None and s.get("pace_fps") is not None:
+            # paced fleet rows model fixed-rate cores, so the SLO numbers
+            # are deterministic up to scheduling — attainment below 1.0
+            # means the placement/admission logic regressed, not the runner
+            if s.get("slo_attainment") != 1.0:
+                failures.append(
+                    f"fleet row {load_key(s)}: slo_attainment "
+                    f"{s.get('slo_attainment')} != 1.0 under paced replicas")
+            fleet_scaling[s["replicas"]] = s.get("goodput_scaling")
+    if fleet_scaling.get(1) is not None and fleet_scaling.get(2) is not None:
+        # the fleet's reason to exist: goodput must scale with replicas.
+        # The committed full run shows ~1.85x; 1.5 leaves room for runner
+        # scheduling noise while still failing a placement regression that
+        # serializes the fleet (scaling ~1.0).
+        if fleet_scaling[2] < 1.5:
+            failures.append(
+                f"fleet goodput scaling 1->2 replicas is "
+                f"{fleet_scaling[2]} < 1.5")
+    base_load = {load_key(s) for s in baseline.get("serving_load", [])}
+    cur_load = {load_key(s) for s in current.get("serving_load", [])}
+    for key in sorted(base_load - cur_load,
+                      key=lambda k: (k[0], k[1] is not None, k[1] or 0)):
         failures.append(
-            f"serving-under-load rows shrank: "
-            f"{len(current['serving_load'])} vs committed "
-            f"{len(baseline['serving_load'])} arrival rates")
+            f"serving-under-load row (rps, replicas)={key} present in the "
+            f"committed baseline but missing from the current record")
     if ratios:
         geomean = 1.0
         for r in ratios:

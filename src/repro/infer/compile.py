@@ -23,7 +23,7 @@ records, never a fresh heuristic call.
     pathlib.Path("plan.json").write_text(model.plan.to_json())
 
 The serving loop over a ``CompiledModel`` is ``repro.infer.engine``;
-``InferenceSession`` survives as a deprecation shim over this function.
+``replicate_model`` places copies of one for the multi-replica fleet.
 """
 from __future__ import annotations
 
@@ -546,4 +546,32 @@ def compile(params, cfg: SpikformerConfig, plan: ExecutionPlan | None = None,
     return CompiledModel(cfg=cfg, backend=backend, folded=tree,
                          plan=resolved,
                          fwd=lower(tree, cfg, backend, jit=jit,
+                                   layer_occupancy=sparse_occ))
+
+
+def replicate_model(model: CompiledModel, *, device=None) -> CompiledModel:
+    """A data-parallel serving copy of a compiled model — the fleet's
+    per-replica plumbing.
+
+    The RESOLVED ``ExecutionPlan`` is shared verbatim: replicas of one
+    fleet run the same plan by construction (routes are already pinned in
+    ``model.plan.routes``, so nothing can silently re-plan). With
+    ``device=None`` the copy shares the folded tree AND the jitted step —
+    jit executables are thread-safe, so thread-backed replicas on one
+    device pay zero extra memory or compile time. With a ``device``, the
+    folded tree is placed there and the plan re-lowers into a fresh step,
+    so that replica's compute (weights committed to its device) runs
+    data-parallel to the others."""
+    if device is None:
+        return CompiledModel(cfg=model.cfg, backend=model.backend,
+                             folded=model.folded, plan=model.plan,
+                             fwd=model._fwd)
+    folded = jax.device_put(model.folded, device)
+    occ_all = model.plan.layer_occupancy or {}
+    sparse_occ = {p: occ_all[p]
+                  for p, r in (model.plan.routes or {}).items()
+                  if r == "lut_sparse"} or None
+    return CompiledModel(cfg=model.cfg, backend=model.backend, folded=folded,
+                         plan=model.plan,
+                         fwd=lower(folded, model.cfg, model.backend,
                                    layer_occupancy=sparse_occ))

@@ -34,21 +34,55 @@ from __future__ import annotations
 
 import dataclasses
 import time
+import typing
 from collections import deque
 
 import numpy as np
 
 PAPER_FPS = 30.0   # VESTA's reported real-time Spikformer V2 rate
 
+# Version of the shared ``stats()`` schema every ServeClient implements.
+# Bump when a shared key is renamed or its meaning changes; additive
+# client-specific keys (queue depth, replica table) do not bump it.
+SERVE_STATS_VERSION = 1
+
+
+@typing.runtime_checkable
+class ServeClient(typing.Protocol):
+    """The one serving surface: sync engine, async runtime, and fleet all
+    speak exactly this, so drivers (``repro.serve.loadgen``,
+    ``benchmarks/infer_bench.py``) run against any of them without
+    isinstance checks.
+
+    * ``submit(images, *, rid=None, on_image=None)`` — keyword-only
+      options; returns a ``Request`` whose ``result()`` yields the labels.
+    * ``stats()`` — the versioned schema built by ``serve_stats``
+      (``stats_version``, ``fps``, ``occupancy``, ``pad_waste``,
+      ``latency_*``, ...).
+    * ``close(timeout=None)`` — drain: every accepted request resolves
+      before close returns.
+    """
+
+    def submit(self, images, *, rid: int | None = None,
+               on_image=None) -> "Request": ...
+
+    def stats(self) -> dict: ...
+
+    def close(self, timeout: float | None = None) -> None: ...
+
 
 @dataclasses.dataclass
 class Request:
-    """One classification request: n images in, n labels out."""
+    """One classification request: n images in, n labels out.
+
+    ``on_image(rid, index, label)`` is an optional streaming callback fired
+    as each image's batch completes (possibly before the whole request)."""
     rid: int
     images: np.ndarray                  # (n, H, W, C) uint8
     labels: list = dataclasses.field(default_factory=list)
     t_submit: float = 0.0
     t_done: float = 0.0
+    on_image: object = None
 
     @property
     def latency_s(self) -> float | None:
@@ -58,6 +92,25 @@ class Request:
         if not self.t_done:
             return None
         return self.t_done - self.t_submit
+
+    def result(self, timeout: float | None = None) -> list:
+        """The label list, blocking/draining as the serving path requires.
+
+        On the sync engine the submitting thread IS the serving thread, so
+        an incomplete request drains the engine (the hook the engine
+        attached at submit) and returns. ``AsyncRequest`` overrides this
+        with a real future wait. One spelling — ``req.result()`` — works
+        against every ServeClient, which is what lets the open-loop load
+        generator drive all of them."""
+        if not self.t_done:
+            drain = getattr(self, "_drain", None)
+            if drain is not None:
+                drain()
+        if not self.t_done:
+            raise RuntimeError(
+                f"request {self.rid} is not complete and has no serving "
+                "loop attached to drain it")
+        return list(self.labels)
 
 
 # ---------------------------------------------------------------------------
@@ -190,8 +243,42 @@ def latency_summary(latencies_s, *, prefix: str = "latency_") -> dict:
     }
 
 
+def serve_stats(*, acct: StepAccounting, done, buckets,
+                extra: dict | None = None) -> dict:
+    """The versioned common ``ServeClient.stats()`` schema — ONE builder,
+    so the shared keys (``fps``, ``occupancy``, ``pad_waste``,
+    ``latency_*``) cannot drift between the sync engine, the async
+    runtime, and the fleet. ``extra`` adds client-specific keys (queue
+    depth, rejections, per-replica table) without touching the shared
+    vocabulary."""
+    out = {
+        "stats_version": SERVE_STATS_VERSION,
+        "requests": len(done),
+        "images": acct.images,
+        "batches": acct.batches,
+        "buckets": list(buckets),
+        "wall_s": round(acct.wall_s, 4),
+        "fps": round(acct.fps, 2),
+        "paper_fps": PAPER_FPS,
+        "realtime": bool(acct.wall_s and acct.fps >= PAPER_FPS),
+        "padded_rows": acct.padded_rows,
+        "total_rows": acct.total_rows,
+        "pad_waste": round(acct.pad_waste, 4),
+        "occupancy": (None if acct.occupancy is None
+                      else round(acct.occupancy, 4)),
+        **latency_summary(r.latency_s for r in done),
+    }
+    if extra:
+        out.update(extra)
+    return out
+
+
 class MicroBatchEngine:
-    """Micro-batching classifier over a multi-bucket ``CompiledModel``."""
+    """Micro-batching classifier over a multi-bucket ``CompiledModel``.
+
+    Implements the ``ServeClient`` protocol (submit / stats / close): the
+    closed-loop member of the serving family — ``close()`` is a drain, and
+    a ``result()`` on an incomplete request drains inline."""
 
     def __init__(self, model):
         self.model = model
@@ -227,28 +314,32 @@ class MicroBatchEngine:
     def wall_s(self) -> float:
         return self.acct.wall_s
 
-    def submit(self, request_or_images, rid: int | None = None) -> Request:
-        """Queue a ``Request`` (or raw images, wrapped into one). Images are
-        validated against the compiled model's input spec at this door.
+    def submit(self, images, *, rid: int | None = None,
+               on_image=None) -> Request:
+        """Queue raw images (or a prebuilt ``Request``) — the ServeClient
+        door, options keyword-only. Images are validated against the
+        compiled model's input spec right here.
 
         ``rid`` names the request id for raw images; for a ``Request``
         instance it must agree with ``req.rid`` — silently ignoring a
         conflicting ``rid=`` would complete the request under an id the
-        caller never sees again."""
-        if isinstance(request_or_images, Request):
-            req = request_or_images
+        caller never sees again. ``on_image(rid, index, label)`` streams
+        per-image completions, same contract as the async runtime."""
+        if isinstance(images, Request):
+            req = images
             if rid is not None and rid != req.rid:
                 raise ValueError(
                     f"submit(rid={rid}) conflicts with the Request's own "
                     f"rid={req.rid}; drop the argument or pass raw images")
+            if on_image is not None:
+                req.on_image = on_image
             req.images = validate_images(req.images,
                                          self.model.input_shape()[1:])
         else:
-            images = validate_images(request_or_images,
-                                     self.model.input_shape()[1:])
+            arr = validate_images(images, self.model.input_shape()[1:])
             if rid is None:
                 rid = self._next_rid
-            req = Request(rid=rid, images=images)
+            req = Request(rid=rid, images=arr, on_image=on_image)
         if req.rid in self._pending:
             # a silent overwrite would strand one of the two requests
             # (completion is counted per rid) — fail at the door instead
@@ -256,6 +347,9 @@ class MicroBatchEngine:
         self._next_rid = max(self._next_rid, req.rid + 1)
         req.t_submit = time.perf_counter()
         req.labels = [None] * len(req.images)
+        # result() on a not-yet-run request drains this engine inline —
+        # the sync spelling of the async future (see Request.result)
+        req._drain = self.run
         if not len(req.images):
             # nothing to queue: complete immediately so run()/stats() see it
             req.t_done = req.t_submit
@@ -302,6 +396,12 @@ class MicroBatchEngine:
         self.acct.record_step(rows=len(work), bucket=bucket, busy_s=busy_s,
                               wall_s=time.perf_counter() - t_start,
                               occupancy=occ)
+        for (req, i), lab in zip(work, labels):
+            if req.on_image is not None:
+                try:
+                    req.on_image(req.rid, i, int(lab))
+                except Exception:
+                    pass   # a streaming callback must not kill serving
         return len(work)
 
     def run(self) -> list[Request]:
@@ -312,6 +412,12 @@ class MicroBatchEngine:
             self.step()
         return self.done
 
+    def close(self, timeout: float | None = None) -> None:
+        """ServeClient close: drain the queue — every accepted request
+        completes. (``timeout`` is accepted for signature parity; a sync
+        drain either finishes or raises.)"""
+        self.run()
+
     # -- accounting ---------------------------------------------------------
 
     @property
@@ -319,21 +425,7 @@ class MicroBatchEngine:
         return self.acct.pad_waste
 
     def stats(self) -> dict:
-        """Serving metrics over everything processed so far."""
-        acct = self.acct
-        return {
-            "requests": len(self.done),
-            "images": acct.images,
-            "batches": acct.batches,
-            "buckets": list(self.buckets),
-            "wall_s": round(acct.wall_s, 4),
-            "fps": round(acct.fps, 2),
-            "paper_fps": PAPER_FPS,
-            "realtime": bool(acct.wall_s and acct.fps >= PAPER_FPS),
-            "padded_rows": acct.padded_rows,
-            "total_rows": acct.total_rows,
-            "pad_waste": round(acct.pad_waste, 4),
-            "occupancy": (None if acct.occupancy is None
-                          else round(acct.occupancy, 4)),
-            **latency_summary(r.latency_s for r in self.done),
-        }
+        """Serving metrics over everything processed so far (the shared
+        ServeClient schema)."""
+        return serve_stats(acct=self.acct, done=self.done,
+                           buckets=self.buckets)

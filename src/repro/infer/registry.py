@@ -131,8 +131,7 @@ def list_backends(*, weight_dtype: str | None = None,
 
 def get_backend(name, **options):
     """Backend *instance* by registered name; instances pass through
-    (callers may hand ``compile()``/``InferenceSession`` a pre-built
-    backend). ``options`` go to the factory — unknown keys are the
+    (callers may hand ``compile()`` a pre-built backend). ``options`` go to the factory — unknown keys are the
     factory's problem, by design.
 
     The spec's ``device_kinds`` is enforced here: a backend built for

@@ -32,8 +32,8 @@ import numpy as np
 from ..core.spikformer import SpikformerConfig, init as spik_init
 from ..infer import ExecutionPlan, MicroBatchEngine, PAPER_FPS, compile
 from ..infer.engine import Request
-from ..serve import (AsyncServeRuntime, ServePolicy, image_maker,
-                     poisson_trace, run_open_loop)
+from ..serve import (AsyncServeRuntime, ServeFleet, ServePolicy,
+                     image_maker, poisson_trace, run_open_loop)
 
 # Pre-split names, kept importable: ImageRequest is the engine Request;
 # SpikformerEngine is a construct-from-params convenience over the split.
@@ -88,6 +88,15 @@ def main(argv=None):
                     help="async: continuous-batching window")
     ap.add_argument("--queue-depth", type=int, default=512,
                     help="async: admission bound, queued images")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="async: serve through a ServeFleet of this many "
+                         "replicas (per-device on multi-device hosts, "
+                         "thread-backed otherwise); 1 = single runtime")
+    ap.add_argument("--pace-fps", type=float, default=None,
+                    help="fleet: model each replica as a fixed-rate core "
+                         "at this many images/second (labels stay real; "
+                         "scaling curves measure placement, not host "
+                         "cores)")
     ap.add_argument("--smoke", action="store_true",
                     help="CI smoke: few requests, assert completion/shapes")
     args = ap.parse_args(argv)
@@ -155,25 +164,33 @@ def main(argv=None):
 
 def main_async(model, args, compile_s: float):
     """Open-loop serving: Poisson arrivals at --rps for --duration seconds
-    through ``AsyncServeRuntime``, measured by ``repro.serve.loadgen``."""
+    through ``AsyncServeRuntime`` (or a ``ServeFleet`` of ``--replicas``),
+    measured by ``repro.serve.loadgen``."""
     policy = ServePolicy(max_wait_ms=args.max_wait_ms, slo_ms=args.slo_ms,
                          max_queue_images=args.queue_depth)
     trace = poisson_trace(rps=args.rps, duration_s=args.duration,
                           seed=args.seed + 1,
                           images_per_request=(1, args.images_per_request))
-    with AsyncServeRuntime(model, policy=policy) as rt:
+    if args.replicas > 1:
+        client = ServeFleet(model, replicas=args.replicas, policy=policy,
+                            pace_fps=args.pace_fps)
+    else:
+        client = AsyncServeRuntime(model, policy=policy)
+    with client:
         metrics = run_open_loop(
-            rt, trace, image_maker(model.input_shape()[1:],
-                                   seed=args.seed + 2),
+            client, trace, image_maker(model.input_shape()[1:],
+                                       seed=args.seed + 2),
             slo_ms=args.slo_ms)
     summary = {
         "backend": model.backend.name,
         "weight_dtype": model.weight_dtype,
         "compile_s": round(compile_s, 3),
-        "mode": "async_open_loop",
+        "mode": ("fleet_open_loop" if args.replicas > 1
+                 else "async_open_loop"),
+        "replicas": args.replicas,
         "paper_fps": PAPER_FPS,
         **metrics,
-        "runtime": rt.stats(),
+        "runtime": client.stats(),
     }
     print(json.dumps(summary))
 
@@ -187,12 +204,21 @@ def main_async(model, args, compile_s: float):
         # 512-image admission bound: a rejection here is a real bug
         assert metrics["requests_rejected"] == 0, metrics
         n_classes = model.cfg.num_classes
-        for req in rt.done:
+        for req in client.done:
             assert len(req.labels) == len(req.images)
             assert all(isinstance(lab, int) and 0 <= lab < n_classes
                        for lab in req.labels)
         assert metrics["completed_fps"] >= PAPER_FPS, metrics
-        print(json.dumps({"smoke": "ok", "mode": "async",
+        if args.replicas > 1:
+            # fleet floor: N replicas sustain N x the single-replica
+            # real-time rate, and the fleet kept every promise
+            assert metrics["goodput_fps"] >= args.replicas * PAPER_FPS, \
+                metrics
+            health = client.health()
+            assert all(r["failures"] == 0 for r in health["replicas"]), \
+                health
+        print(json.dumps({"smoke": "ok", "mode": summary["mode"],
+                          "replicas": args.replicas,
                           "completed_fps": metrics["completed_fps"],
                           "goodput_fps": metrics["goodput_fps"],
                           "slo_attainment": metrics["slo_attainment"]}))

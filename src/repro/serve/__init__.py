@@ -1,17 +1,26 @@
 """Asynchronous continuous-batching serving over a ``CompiledModel`` —
 the open-loop half of the serving story. ``AsyncServeRuntime`` accepts
 requests from caller threads into a bounded queue and completes futures as
-the background worker's bucket steps finish; every scheduling decision is
-the pure, clock-injected ``ContinuousBatchingScheduler``; ``loadgen``
-measures goodput / tail latency / SLO attainment under a real arrival
-process. See README.md in this directory."""
-from .loadgen import Arrival, image_maker, poisson_trace, run_open_loop
+the background worker's bucket steps finish; ``ServeFleet`` scales that
+shape to N replicas behind one placement-aware ``FleetScheduler``; every
+scheduling decision is pure and clock-injected; ``loadgen`` measures
+goodput / tail latency / SLO attainment under a real arrival process.
+All three serving surfaces (sync ``MicroBatchEngine``, async runtime,
+fleet) speak the ``ServeClient`` protocol — submit / stats / close —
+with one versioned stats schema. See README.md in this directory."""
+from ..infer.engine import SERVE_STATS_VERSION, ServeClient
+from .fleet import ServeFleet
+from .loadgen import (Arrival, image_maker, poisson_trace, run_open_loop,
+                      run_replica_sweep)
 from .runtime import AsyncRequest, AsyncServeRuntime
-from .scheduler import (ContinuousBatchingScheduler, Decision, QueueFull,
-                        ServePolicy)
+from .scheduler import (ContinuousBatchingScheduler, Decision,
+                        FleetScheduler, QueueFull, ServePolicy)
 
 __all__ = [
-    "AsyncRequest", "AsyncServeRuntime",
-    "ContinuousBatchingScheduler", "Decision", "QueueFull", "ServePolicy",
+    "ServeClient", "SERVE_STATS_VERSION",
+    "AsyncRequest", "AsyncServeRuntime", "ServeFleet",
+    "ContinuousBatchingScheduler", "FleetScheduler", "Decision",
+    "QueueFull", "ServePolicy",
     "Arrival", "image_maker", "poisson_trace", "run_open_loop",
+    "run_replica_sweep",
 ]

@@ -14,6 +14,13 @@ and SLO attainment. This module produces exactly those numbers.
                                 image_maker(model.input_shape()[1:], seed=1),
                                 slo_ms=100)
 
+The driver speaks only the ``ServeClient`` protocol (submit that may
+raise ``QueueFull``, handles whose ``result`` blocks), so the same trace
+drives the sync ``MicroBatchEngine``, the ``AsyncServeRuntime``, or a
+multi-replica ``ServeFleet`` without an isinstance anywhere —
+``run_replica_sweep`` exploits that to replay one trace across fleet
+sizes and report goodput scaling.
+
 The trace is a plain list of ``Arrival`` values, deterministic from its
 seed, so a trace can be replayed — through the async runtime, or through
 the sync engine for the bit-identical-labels parity check — and committed
@@ -138,3 +145,35 @@ def run_open_loop(runtime, trace, make_images, *, slo_ms: float,
         "slo_attainment": round(len(within) / len(done), 4) if done else None,
         **latency_summary(r.latency_s for r in done),
     }
+
+
+def run_replica_sweep(make_client, trace, make_images_factory, *,
+                      replica_counts=(1, 2), slo_ms: float,
+                      result_timeout_s: float = 60.0,
+                      clock=time.perf_counter, sleep=time.sleep) -> list:
+    """Replay ONE trace across fleet sizes and measure goodput scaling.
+
+    ``make_client(n)`` builds a fresh ``ServeClient`` with ``n`` replicas
+    (closed here after its run); ``make_images_factory()`` returns a fresh
+    deterministic image maker per run, so every fleet size sees the exact
+    same arrival schedule AND payload bytes — the only variable is the
+    replica count. Returns one metrics row per count (the ``run_open_loop``
+    schema plus ``replicas`` and ``goodput_scaling``, normalized to the
+    first count's goodput — run counts smallest-first so the baseline is
+    the 1-replica row)."""
+    rows, base = [], None
+    for n in replica_counts:
+        client = make_client(n)
+        try:
+            metrics = run_open_loop(
+                client, trace, make_images_factory(), slo_ms=slo_ms,
+                result_timeout_s=result_timeout_s, clock=clock, sleep=sleep)
+        finally:
+            client.close()
+        row = {"replicas": int(n), **metrics}
+        if base is None:
+            base = row["goodput_fps"]
+        row["goodput_scaling"] = (round(row["goodput_fps"] / base, 4)
+                                  if base else None)
+        rows.append(row)
+    return rows

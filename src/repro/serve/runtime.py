@@ -39,20 +39,19 @@ from concurrent.futures import Future
 
 import numpy as np
 
-from ..infer.engine import (PAPER_FPS, Request, StepAccounting,
-                            assemble_batch, batch_occupancy, latency_summary,
-                            validate_images)
+from ..infer.engine import (Request, StepAccounting, assemble_batch,
+                            batch_occupancy, serve_stats, validate_images)
 from .scheduler import ContinuousBatchingScheduler, QueueFull, ServePolicy
 
 
 @dataclasses.dataclass
 class AsyncRequest(Request):
     """A ``Request`` plus async completion: a future resolving to the label
-    list, and an optional per-image streaming callback
-    ``on_image(rid, index, label)`` fired as each image's batch finishes
-    (i.e. possibly before the whole request completes)."""
+    list. The per-image streaming callback ``on_image(rid, index, label)``
+    (fired as each image's batch finishes, i.e. possibly before the whole
+    request completes) lives on the base ``Request`` — one field, one
+    contract, sync and async."""
     future: Future = dataclasses.field(default_factory=Future)
-    on_image: object = None
 
     def result(self, timeout: float | None = None) -> list:
         """Block until every image in this request is classified; returns
@@ -63,6 +62,7 @@ class AsyncRequest(Request):
 class AsyncServeRuntime:
     """Continuous-batching serving runtime over a ``CompiledModel``.
 
+    Implements the ``ServeClient`` protocol (submit / stats / close).
     Thread-safe ``submit()`` from any number of caller threads; one
     background worker owns the model. ``close()`` (or leaving the context
     manager) drains the queue — every accepted request completes; overload
@@ -312,28 +312,15 @@ class AsyncServeRuntime:
             failed = self.failed_requests
             queued = len(self._queue)
             acct = dataclasses.replace(self.acct)
-        out = {
-            "requests": len(done),
-            "images": acct.images,
-            "batches": acct.batches,
-            "buckets": list(self.scheduler.buckets),
+        extra = {
             "queued_images": queued,
             "requests_rejected": rejected,    # loadgen's spelling: one
             "requests_failed": failed,        # vocabulary across reporters
-            "wall_s": round(acct.wall_s, 4),
-            "fps": round(acct.fps, 2),
-            "paper_fps": PAPER_FPS,
-            "realtime": bool(acct.wall_s and acct.fps >= PAPER_FPS),
-            "padded_rows": acct.padded_rows,
-            "total_rows": acct.total_rows,
-            "pad_waste": round(acct.pad_waste, 4),
-            "occupancy": (None if acct.occupancy is None
-                          else round(acct.occupancy, 4)),
-            **latency_summary(r.latency_s for r in done),
         }
         slo_s = self.scheduler.policy.slo_s
         if slo_s is not None and done:
             within = sum(1 for r in done if r.latency_s <= slo_s)
-            out["slo_ms"] = self.scheduler.policy.slo_ms
-            out["slo_attainment"] = round(within / len(done), 4)
-        return out
+            extra["slo_ms"] = self.scheduler.policy.slo_ms
+            extra["slo_attainment"] = round(within / len(done), 4)
+        return serve_stats(acct=acct, done=done,
+                           buckets=self.scheduler.buckets, extra=extra)

@@ -94,12 +94,17 @@ class Decision:
     or "dispatch" (run ``rows`` real rows in a ``bucket``-shaped step now).
     ``reason`` names the rule that fired — it surfaces in logs and pins the
     decision table in tests.
+
+    ``replica`` is the placement extension (``FleetScheduler``): which
+    replica runs a dispatched chunk. ``None`` means "the caller's only
+    worker" — the single-runtime decisions are unchanged values.
     """
     action: str
     bucket: int = 0
     rows: int = 0
     wait_s: float = 0.0
     reason: str = ""
+    replica: int | None = None
 
 
 class ContinuousBatchingScheduler:
@@ -224,3 +229,108 @@ class ContinuousBatchingScheduler:
         return Decision(action="wait", wait_s=deadline - now_s,
                         reason=f"batching window open ({reason.split()[0]} "
                                f"deadline in {deadline - now_s:.4f}s)")
+
+
+class FleetScheduler(ContinuousBatchingScheduler):
+    """Wait-vs-dispatch PLUS placement over ``n_replicas`` workers.
+
+    Same pure contract as the base scheduler — every method is a
+    deterministic function of its arguments and the observed EWMAs, so a
+    fleet's full decision table (including which replica got which bucket
+    chunk) replays under an injected clock. Placement policy:
+
+    * each replica keeps its OWN per-bucket and per-(bucket, sparse|dense)
+      step-time EWMAs, fed by ``observe_step(..., replica=i)`` — replicas
+      on different devices (or a replica mid-degradation) have genuinely
+      different service times, and one global estimate would route batches
+      to whichever replica happened to be measured last;
+    * ``place()`` sends a chunk to the FREE replica whose class-conditioned
+      estimate for that bucket is lowest (ties break on the lowest index,
+      keeping the table deterministic) — under sparse/dense SLO pressure
+      that is the replica whose estimate meets the deadline;
+    * when every replica is busy, ``decide()`` returns a bounded "wait"
+      instead of a dispatch nobody can run; a completion re-opens the
+      decision (the fleet's condition variable wakes the dispatcher).
+    """
+
+    def __init__(self, buckets, policy: ServePolicy | None = None, *,
+                 n_replicas: int = 1):
+        super().__init__(buckets, policy)
+        if n_replicas < 1:
+            raise ValueError(f"n_replicas must be >= 1, got {n_replicas!r}")
+        self.n_replicas = int(n_replicas)
+        self._replica_step_s: dict[tuple, float] = {}   # (replica, bucket)
+        # (replica, bucket, "sparse"|"dense") -> EWMA step seconds
+        self._replica_class_step_s: dict[tuple, float] = {}
+
+    def observe_step(self, bucket: int, seconds: float,
+                     occupancy: float | None = None,
+                     replica: int | None = None) -> None:
+        """Feed one measured step: the global EWMAs (SLO pressure budgets
+        the whole split regardless of where chunks ran) AND, when
+        ``replica`` is named, that replica's own estimates."""
+        super().observe_step(bucket, seconds, occupancy=occupancy)
+        if replica is None:
+            return
+        key = (replica, bucket)
+        prev = self._replica_step_s.get(key)
+        self._replica_step_s[key] = (seconds if prev is None
+                                     else 0.8 * prev + 0.2 * seconds)
+        if occupancy is None:
+            return
+        cls = self._occupancy_class(occupancy)
+        if cls is not None:
+            ckey = (replica, bucket, cls)
+            prev = self._replica_class_step_s.get(ckey)
+            self._replica_class_step_s[ckey] = (
+                seconds if prev is None else 0.8 * prev + 0.2 * seconds)
+
+    def replica_estimate(self, replica: int, bucket: int,
+                         occupancy: float | None = None) -> float:
+        """Expected step seconds for ``bucket`` ON ``replica``: the
+        replica's (bucket, class) EWMA when an occupancy (or the running
+        occupancy EWMA) selects an observed class, else the replica's
+        bucket EWMA, else the fleet-wide ``service_estimate`` (a fresh or
+        freshly-swapped replica borrows the fleet's estimate until it has
+        history of its own)."""
+        occ = occupancy if occupancy is not None else self._occ_ewma
+        if occ is not None:
+            cls = self._occupancy_class(occ)
+            if cls is not None and (replica, bucket, cls) in \
+                    self._replica_class_step_s:
+                return self._replica_class_step_s[(replica, bucket, cls)]
+        if (replica, bucket) in self._replica_step_s:
+            return self._replica_step_s[(replica, bucket)]
+        return self.service_estimate(bucket, occupancy)
+
+    def place(self, bucket: int, *, busy, occupancy: float | None = None) \
+            -> int | None:
+        """The free replica with the lowest class-conditioned estimate for
+        ``bucket`` (lowest index on ties); ``None`` when ``busy`` masks
+        every replica."""
+        free = [i for i in range(self.n_replicas) if not busy[i]]
+        if not free:
+            return None
+        return min(free, key=lambda i: (self.replica_estimate(i, bucket,
+                                                              occupancy), i))
+
+    def decide(self, *, backlog: int, oldest_submit_s: float | None,
+               now_s: float, draining: bool = False, busy=None) -> Decision:
+        """The base wait-vs-dispatch decision, with a dispatch placed onto
+        a replica. ``busy`` is the per-replica busy mask (default: all
+        free). A dispatch with nowhere to run becomes a bounded wait —
+        never a silent queue on a busy replica the policy did not pick."""
+        d = super().decide(backlog=backlog, oldest_submit_s=oldest_submit_s,
+                           now_s=now_s, draining=draining)
+        if d.action != "dispatch":
+            return d
+        busy = (False,) * self.n_replicas if busy is None else tuple(busy)
+        if len(busy) != self.n_replicas:
+            raise ValueError(f"busy mask has {len(busy)} entries for "
+                             f"{self.n_replicas} replicas")
+        r = self.place(d.bucket, busy=busy)
+        if r is None:
+            return Decision(action="wait",
+                            wait_s=max(self.policy.max_wait_s, 1e-3),
+                            reason="all replicas busy")
+        return dataclasses.replace(d, replica=r)

@@ -12,6 +12,7 @@ from __future__ import annotations
 import re
 
 import jax
+import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from ..nn.module import map_with_path
@@ -21,6 +22,36 @@ from .compat import abstract_mesh  # noqa: F401  (re-export for rule tests)
 def dp_axes(mesh: Mesh):
     """The data-parallel axis group: ('pod','data') on multi-pod meshes."""
     return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def serving_mesh(devices=None) -> Mesh:
+    """A 1-D ``("data",)`` mesh over the host's devices — the axis a
+    serving fleet replicates over. Inference replicas are pure data
+    parallelism (whole-model copies, batches split across them), so the
+    fleet consumes only this axis; the FSDP x TP rule table above is the
+    training/large-model story."""
+    devices = list(jax.devices()) if devices is None else list(devices)
+    if not devices:
+        raise ValueError("serving_mesh needs at least one device")
+    return Mesh(np.asarray(devices), ("data",))
+
+
+def replica_devices(n: int, mesh: Mesh | None = None) -> list:
+    """Device assignment for ``n`` data-parallel serving replicas: replica
+    ``i`` serves from device ``i % mesh_size`` along the data axis of
+    ``mesh`` (default: ``serving_mesh()`` over the host).
+
+    On a single-device host every entry is ``None`` — the fleet's
+    thread-backed mode, where replicas share the default device (and the
+    jitted step; see ``repro.infer.compile.replicate_model``) instead of
+    paying a pointless device_put onto the device they are already on."""
+    if n < 1:
+        raise ValueError(f"need n >= 1 replicas, got {n!r}")
+    mesh = serving_mesh() if mesh is None else mesh
+    devs = list(np.asarray(mesh.devices).flat)
+    if len(devs) <= 1:
+        return [None] * n
+    return [devs[i % len(devs)] for i in range(n)]
 
 
 # (regex on path, spec builder over (dp,)) — first match wins

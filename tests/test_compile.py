@@ -1,6 +1,8 @@
 """The compile/serve split: backend registry, ExecutionPlan JSON
-round-trip, the pass pipeline, multi-bucket engine parity, and the
-InferenceSession deprecation shim.
+round-trip, the pass pipeline, multi-bucket engine parity, replica
+placement (``replicate_model``), and the retirement of the old
+InferenceSession shim (the surface is gone AND the package imports
+warning-free).
 
 The exactness standard is inherited from tests/test_infer.py: packed and
 reference logits are bit-identical on CPU — including when requests reach
@@ -17,11 +19,10 @@ import numpy as np
 import pytest
 
 from repro.core.spikformer import SpikformerConfig, init, fold_inference_params
-from repro.infer import (CompiledModel, ExecutionPlan, InferenceSession,
-                         MicroBatchEngine, Request, backend_spec,
-                         compile as infer_compile, list_backends,
-                         quantize_weights, register_backend,
-                         unregister_backend)
+from repro.infer import (CompiledModel, ExecutionPlan, MicroBatchEngine,
+                         Request, backend_spec, compile as infer_compile,
+                         list_backends, quantize_weights, register_backend,
+                         replicate_model, unregister_backend)
 from repro.infer.compile import fold_bn, plan_route_tables
 from repro.kernels.lut_matmul import RouteConstants
 from repro.kernels import ops
@@ -425,16 +426,47 @@ def test_autotune_fit_and_plan_accepted_end_to_end(small):
 
 
 # ---------------------------------------------------------------------------
-# the deprecation shim
+# the shim is gone: the old name is unimportable and nothing in the
+# package warms up with a DeprecationWarning
 # ---------------------------------------------------------------------------
 
-def test_session_shim_warns_and_delegates(small):
+def test_session_shim_removed():
+    with pytest.raises(ImportError):
+        from repro.infer import InferenceSession  # noqa: F401
+    assert not (pathlib.Path(__file__).resolve().parent.parent
+                / "src/repro/infer/session.py").exists()
+
+
+def test_infer_package_compiles_without_deprecation_warnings(small):
     cfg, params, img = small
-    with pytest.warns(DeprecationWarning, match="compile"):
-        sess = InferenceSession(params, cfg, backend="packed", batch_size=2)
-    assert isinstance(sess.compiled, CompiledModel)
-    assert sess.batch_size == 2 and sess.weight_dtype == "float32"
-    assert sess.plan == sess.compiled.plan.routes and sess.plan
+    import warnings as _warnings
+    with _warnings.catch_warnings():
+        _warnings.simplefilter("error", DeprecationWarning)
+        model = infer_compile(params, cfg, ExecutionPlan(batch_buckets=(2,)))
+        model.classify(img)
+
+
+# ---------------------------------------------------------------------------
+# replica placement
+# ---------------------------------------------------------------------------
+
+def test_replicate_model_shares_plan_and_math(small):
+    cfg, params, img = small
     model = infer_compile(params, cfg, ExecutionPlan(batch_buckets=(2,)))
-    exact(sess.logits(img), model.logits(img))
-    exact(sess.classify(img), model.classify(img))
+    twin = replicate_model(model)
+    # thread-backed replica: same resolved plan and folded tree verbatim,
+    # same jitted step (no recompile for a same-device copy)
+    assert twin.plan is model.plan
+    assert twin.folded is model.folded
+    assert twin._fwd is model._fwd
+    exact(twin.logits(img), model.logits(img))
+
+
+def test_replicate_model_onto_device_recompiles_bit_exact(small):
+    cfg, params, img = small
+    model = infer_compile(params, cfg, ExecutionPlan(batch_buckets=(2,)))
+    dev = jax.devices()[0]
+    placed = replicate_model(model, device=dev)
+    assert placed.plan is model.plan
+    assert placed._fwd is not model._fwd    # per-device executable
+    exact(placed.logits(img), model.logits(img))

@@ -4,7 +4,7 @@ reference BIT-EXACTLY on random binary/uint8 inputs — spikes are binary, so
 no tolerance — including the T-fold across ``ceil(T/8)`` plane groups and
 the SSSC bit-plane 2^k bookkeeping. The int8-weight route is held to the
 same standard against its float-emulation oracle (FloatBackend over the
-quantized tree). Plus: InferenceSession end-to-end equality over
+quantized tree). Plus: compiled-model end-to-end equality over
 T in {4, 8, 12, 16} x {float32, int8}, static-shape batching, and the
 micro-batching serve engine."""
 import dataclasses
@@ -20,8 +20,9 @@ from repro.core.spike import (num_plane_groups, pack_timesteps,
                               unpack_timesteps, space_to_depth)
 from repro.core.spikformer import (SpikformerConfig, init, apply,
                                    fold_inference_params, forward_folded)
-from repro.infer import (FloatBackend, PackedBackend, InferenceSession,
-                         quantize_folded, quantize_layer)
+from repro.infer import (ExecutionPlan, FloatBackend, PackedBackend,
+                         compile as infer_compile, quantize_folded,
+                         quantize_layer)
 from repro.kernels import ops
 
 TS = [1, 4, 8, 12, 16]
@@ -212,8 +213,18 @@ def test_wssl_int8_scale_fold_parity(seed, t):
 
 
 # ---------------------------------------------------------------------------
-# end-to-end: InferenceSession packed == float reference == training graph
+# end-to-end: compiled packed == float reference == training graph
 # ---------------------------------------------------------------------------
+
+def _compiled(params, cfg, *, backend="packed", batch_size=2,
+              weight_dtype=None, folded=False, jit=True):
+    """One-bucket compile() — the parity pair constructor."""
+    return infer_compile(params, cfg,
+                         ExecutionPlan(backend=backend,
+                                       weight_dtype=weight_dtype,
+                                       batch_buckets=(int(batch_size),)),
+                         folded=folded, jit=jit)
+
 
 @pytest.fixture(scope="module")
 def small():
@@ -226,27 +237,27 @@ def small():
 
 @pytest.mark.parametrize("t", [4, 8, 12, 16])
 @pytest.mark.parametrize("weight_dtype", ["float32", "int8"])
-def test_session_packed_matches_reference_exactly(small, t, weight_dtype):
+def test_compiled_packed_matches_reference_exactly(small, t, weight_dtype):
     """The acceptance sweep: multi-group T and int8 weights, all four
     dataflows end to end, packed logits == reference logits bit for bit."""
     cfg, params, img = small
     cfg = dataclasses.replace(cfg, timesteps=t)
-    packed = InferenceSession(params, cfg, backend="packed", batch_size=2,
-                              weight_dtype=weight_dtype)
-    ref = InferenceSession(params, cfg, backend="reference", batch_size=2,
-                           weight_dtype=weight_dtype)
+    packed = _compiled(params, cfg, backend="packed",
+                       weight_dtype=weight_dtype)
+    ref = _compiled(params, cfg, backend="reference",
+                    weight_dtype=weight_dtype)
     lp, lr = packed.logits(img), ref.logits(img)
     assert lp.shape == (5, cfg.num_classes)
     exact(lp, lr)
 
 
-def test_session_close_to_training_graph(small):
+def test_compiled_close_to_training_graph(small):
     """The folded inference graph tracks the unfolded train-mode graph (BN
     folding is float-associative, so this one is allclose, not exact)."""
     cfg, params, img = small
-    sess = InferenceSession(params, cfg, backend="packed", batch_size=5)
+    model = _compiled(params, cfg, backend="packed", batch_size=5)
     want, _ = apply(params, img, cfg, train=False)
-    np.testing.assert_allclose(np.asarray(sess.logits(img)),
+    np.testing.assert_allclose(np.asarray(model.logits(img)),
                                np.asarray(want), rtol=1e-3, atol=1e-3)
 
 
@@ -268,21 +279,21 @@ def test_int8_lossless_on_grid_weights(t):
     exact(via_float, via_int8)
 
 
-def test_session_static_batching_invariant(small):
+def test_compiled_static_batching_invariant(small):
     """Any request size through the fixed-shape step == one whole-batch run
     (pad rows must not leak into real outputs)."""
     cfg, params, img = small
-    sess = InferenceSession(params, cfg, backend="packed", batch_size=2)
-    whole = InferenceSession(params, cfg, backend="packed", batch_size=5)
-    exact(sess.logits(img), whole.logits(img))
-    exact(sess.logits(img[:1]), whole.logits(img)[:1])
-    labs = sess.classify(img)
+    model = _compiled(params, cfg, backend="packed", batch_size=2)
+    whole = _compiled(params, cfg, backend="packed", batch_size=5)
+    exact(model.logits(img), whole.logits(img))
+    exact(model.logits(img[:1]), whole.logits(img)[:1])
+    labs = model.classify(img)
     assert labs.shape == (5,) and labs.dtype == jnp.int32
 
 
 @pytest.mark.parametrize("weight_dtype", ["float32", "int8"])
 def test_forward_folded_backends_agree(small, weight_dtype):
-    """forward_folded (the core driver, below the session layer) produces
+    """forward_folded (the core driver, below the compile layer) produces
     identical logits through the float and packed backends."""
     cfg, params, img = small
     folded = fold_inference_params(params, cfg)
@@ -293,37 +304,37 @@ def test_forward_folded_backends_agree(small, weight_dtype):
     exact(got, want)
 
 
-def test_session_rejects_unknown_weight_dtype(small):
+def test_compiled_rejects_unknown_weight_dtype(small):
     cfg, params, _ = small
     with pytest.raises(ValueError, match="weight_dtype"):
-        InferenceSession(params, cfg, weight_dtype="int4")
+        _compiled(params, cfg, weight_dtype="int4")
 
 
-def test_session_weight_dtype_vs_prequantized_tree(small):
+def test_compiled_weight_dtype_vs_prequantized_tree(small):
     """A pre-quantized folded tree: default dtype auto-reports int8; an
     explicit float32 request must fail loudly, not silently run int8."""
     cfg, params, img = small
     qtree = quantize_folded(fold_inference_params(params, cfg))
-    auto = InferenceSession(qtree, cfg, folded=True, batch_size=5)
+    auto = _compiled(qtree, cfg, folded=True, batch_size=5)
     assert auto.weight_dtype == "int8"
-    direct = InferenceSession(params, cfg, batch_size=5, weight_dtype="int8")
+    direct = _compiled(params, cfg, batch_size=5, weight_dtype="int8")
     exact(auto.logits(img), direct.logits(img))
     with pytest.raises(ValueError, match="already int8-quantized"):
-        InferenceSession(qtree, cfg, folded=True, weight_dtype="float32")
+        _compiled(qtree, cfg, folded=True, weight_dtype="float32")
 
 
 def test_packed_backend_rejects_add_residual(small):
     cfg, params, img = small
     cfg_add = dataclasses.replace(cfg, residual="add")
-    sess = InferenceSession(params, cfg_add, backend="packed", batch_size=5,
-                            jit=False)
+    model = _compiled(params, cfg_add, backend="packed", batch_size=5,
+                      jit=False)
     with pytest.raises(ValueError, match="binary"):
-        sess.logits(img)
+        model.logits(img)
 
 
-def test_serve_engine_matches_session(small):
+def test_serve_engine_matches_compiled(small):
     """The micro-batching engine (images from different requests fused into
-    one step) classifies identically to a direct session call."""
+    one step) classifies identically to a direct compiled-model call."""
     from repro.launch.serve_spikformer import SpikformerEngine, ImageRequest
     cfg, params, img = small
     eng = SpikformerEngine(params, cfg, batch_size=4, backend="packed")

@@ -22,8 +22,9 @@ import pytest
 from repro.core.spike import (num_plane_groups, pack_timesteps,
                               unpack_timesteps, space_to_depth)
 from repro.core.spikformer import SpikformerConfig, init
-from repro.infer import FloatBackend, PackedBackend, InferenceSession
-from repro.infer.session import plan_routes
+from repro.infer import (ExecutionPlan, FloatBackend, PackedBackend,
+                         compile as infer_compile)
+from repro.infer.compile import plan_route_tables
 from repro.core.spikformer import fold_inference_params
 from repro.infer.quant import quantize_layer
 from repro.kernels import ops
@@ -242,11 +243,23 @@ def test_choose_route_picks_lut_at_bench_layer_shapes():
         assert ops.choose_route(m=m, k=k, n=n, g=1, t=4) == "lut", (m, k, n)
 
 
+def _compiled(params, cfg, *, backend="packed", batch_size=2,
+              weight_dtype=None, route="auto", folded=False, pallas=None,
+              jit=True):
+    """One-bucket compile() under the historical session argument names —
+    keeps the parity tests reading like serving call sites."""
+    options = {} if pallas is None else {"pallas": pallas}
+    plan = ExecutionPlan(backend=backend, weight_dtype=weight_dtype,
+                         batch_buckets=(int(batch_size),), route=route,
+                         backend_options=options)
+    return infer_compile(params, cfg, plan, folded=folded, jit=jit)
+
+
 def test_plan_routes_annotates_tables_and_paths():
     cfg = SpikformerConfig().scaled()
     params = init(jax.random.PRNGKey(0), cfg)
     folded = fold_inference_params(params, cfg)
-    tree, plan = plan_routes(folded, cfg, batch_size=2)
+    tree, plan = plan_route_tables(folded, cfg, batch_size=2)
     assert set(plan) >= {"scs/conv0", "blocks/b0/mlp/fc1"}
     for path, route in plan.items():
         parts = path.split("/")
@@ -270,7 +283,7 @@ def test_plan_routes_annotates_tables_and_paths():
 @pytest.mark.parametrize("t,weight_dtype", [(1, "float32"), (9, "int8"),
                                             (17, "float32"), (9, "float32"),
                                             (17, "int8")])
-def test_session_lut_planned_parity_awkward_t(t, weight_dtype):
+def test_compiled_lut_planned_parity_awkward_t(t, weight_dtype):
     """Packed (LUT-planned) logits == reference logits bit for bit at
     T in {1, 9, 17} — the last-group zero-bit invariant under the new route,
     end to end through all four dataflows."""
@@ -278,15 +291,15 @@ def test_session_lut_planned_parity_awkward_t(t, weight_dtype):
     params = init(jax.random.PRNGKey(0), cfg)
     img = jax.random.randint(jax.random.PRNGKey(1), (2, 32, 32, 3), 0, 256,
                              jnp.uint8)
-    packed = InferenceSession(params, cfg, backend="packed", batch_size=2,
-                              weight_dtype=weight_dtype)
-    ref = InferenceSession(params, cfg, backend="reference", batch_size=2,
-                           weight_dtype=weight_dtype)
-    assert any(r == "lut" for r in packed.plan.values())
+    packed = _compiled(params, cfg, backend="packed",
+                       weight_dtype=weight_dtype)
+    ref = _compiled(params, cfg, backend="reference",
+                    weight_dtype=weight_dtype)
+    assert any(r == "lut" for r in packed.plan.routes.values())
     exact(packed.logits(img), ref.logits(img))
 
 
-def test_session_route_unpack_pins_oracle_route():
+def test_compiled_route_unpack_pins_oracle_route():
     """route='unpack' disables planning; for int8 weights the two routes are
     bit-identical end to end (exact integer accumulators), which pins the
     LUT route against the legacy oracle through the whole network."""
@@ -294,19 +307,19 @@ def test_session_route_unpack_pins_oracle_route():
     params = init(jax.random.PRNGKey(0), cfg)
     img = jax.random.randint(jax.random.PRNGKey(1), (2, 32, 32, 3), 0, 256,
                              jnp.uint8)
-    auto = InferenceSession(params, cfg, backend="packed", batch_size=2,
-                            weight_dtype="int8")
-    pinned = InferenceSession(params, cfg, backend="packed", batch_size=2,
-                              weight_dtype="int8", route="unpack")
-    assert pinned.plan == {} and any(r == "lut" for r in auto.plan.values())
+    auto = _compiled(params, cfg, backend="packed", weight_dtype="int8")
+    pinned = _compiled(params, cfg, backend="packed", weight_dtype="int8",
+                       route="unpack")
+    assert pinned.plan.routes == {} and \
+        any(r == "lut" for r in auto.plan.routes.values())
     exact(auto.logits(img), pinned.logits(img))
 
 
-def test_session_rejects_unknown_route():
+def test_compiled_rejects_unknown_route():
     cfg = SpikformerConfig().scaled()
     params = init(jax.random.PRNGKey(0), cfg)
     with pytest.raises(ValueError, match="route"):
-        InferenceSession(params, cfg, route="fused")
+        _compiled(params, cfg, route="fused")
 
 
 def test_route_unpack_strips_stale_lut_annotations():
@@ -317,9 +330,9 @@ def test_route_unpack_strips_stale_lut_annotations():
     params = init(jax.random.PRNGKey(0), cfg)
     img = jax.random.randint(jax.random.PRNGKey(1), (2, 32, 32, 3), 0, 256,
                              jnp.uint8)
-    auto = InferenceSession(params, cfg, backend="packed", batch_size=2)
-    pinned = InferenceSession(auto.folded, cfg, folded=True, backend="packed",
-                              batch_size=2, route="unpack")
+    auto = _compiled(params, cfg, backend="packed")
+    pinned = _compiled(auto.folded, cfg, folded=True, backend="packed",
+                       route="unpack")
 
     def lut_leaves(tree):
         found = []
@@ -328,26 +341,24 @@ def test_route_unpack_strips_stale_lut_annotations():
         return found
 
     assert lut_leaves(auto.folded) and not lut_leaves(pinned.folded)
-    fresh = InferenceSession(params, cfg, backend="packed", batch_size=2,
-                             route="unpack")
+    fresh = _compiled(params, cfg, backend="packed", route="unpack")
     exact(pinned.logits(img), fresh.logits(img))
 
 
 def test_reference_skips_and_pallas_builds_tables():
     """The table capability follows who gathers: the float reference never
     does (its LUT layers carry a cheap boolean plan flag), while a
-    Pallas-pinned packed session DOES — its byte-LUT kernel gathers the
+    Pallas-pinned packed model DOES — its byte-LUT kernel gathers the
     (C,256,N) tables from VMEM, so planning must build them."""
     cfg = SpikformerConfig().scaled()
     params = init(jax.random.PRNGKey(0), cfg)
-    ref = InferenceSession(params, cfg, backend="reference", batch_size=2)
-    pal = InferenceSession(params, cfg, backend="packed", batch_size=2,
-                           pallas=True, jit=False)
+    ref = _compiled(params, cfg, backend="reference")
+    pal = _compiled(params, cfg, backend="packed", pallas=True, jit=False)
 
-    def lut_layers(sess):
-        for path, route in sess.plan.items():
+    def lut_layers(model):
+        for path, route in model.plan.routes.items():
             if route == "lut":
-                layer = sess.folded
+                layer = model.folded
                 for p in path.split("/"):
                     layer = layer[p]
                 yield layer

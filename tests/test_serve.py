@@ -9,7 +9,13 @@ Three layers, three standards of proof:
   and ``AsyncServeRuntime`` (per-image math is row-independent and
   bucket-invariant, so batching happenstance cannot leak into labels);
 * the LOADGEN is deterministic from its seed and measures the open-loop
-  contract: every accepted request completes (zero dropped).
+  contract: every accepted request completes (zero dropped);
+* the FLEET is held to all three at once: placement decisions replay
+  from a pinned table through the pure ``FleetScheduler``, an identical
+  trace through 1 and N replicas yields bit-identical labels, the
+  lifecycle (warmup/probe/drain/swap) never drops an accepted request,
+  and all three serving surfaces satisfy the one ``ServeClient``
+  protocol with the shared versioned stats schema.
 """
 import threading
 
@@ -18,14 +24,15 @@ import numpy as np
 import pytest
 
 from repro.core.spikformer import SpikformerConfig, init
-from repro.infer import ExecutionPlan, MicroBatchEngine, compile as \
-    infer_compile
+from repro.infer import (ExecutionPlan, MicroBatchEngine, SERVE_STATS_VERSION,
+                         ServeClient, compile as infer_compile)
 from repro.infer.compile import plan_chunks
 from repro.infer.engine import (StepAccounting, assemble_batch,
                                 latency_summary, validate_images)
 from repro.serve import (Arrival, AsyncServeRuntime,
-                         ContinuousBatchingScheduler, QueueFull, ServePolicy,
-                         image_maker, poisson_trace, run_open_loop)
+                         ContinuousBatchingScheduler, FleetScheduler,
+                         QueueFull, ServeFleet, ServePolicy, image_maker,
+                         poisson_trace, run_open_loop, run_replica_sweep)
 
 
 def exact(a, b):
@@ -451,3 +458,284 @@ def test_runtime_close_idempotent_without_start(small):
     rt.close()
     with pytest.raises(RuntimeError, match="closed"):
         rt.submit(np.zeros((1, 16, 16, 3), np.uint8))
+
+
+# ---------------------------------------------------------------------------
+# the unified ServeClient surface: one protocol, one stats schema
+# ---------------------------------------------------------------------------
+
+def test_all_three_clients_satisfy_serve_client_protocol(small):
+    _, model, _ = small
+    eng = MicroBatchEngine(model)
+    rt = AsyncServeRuntime(model)
+    fleet = ServeFleet(model, replicas=2)
+    for client in (eng, rt, fleet):
+        assert isinstance(client, ServeClient), type(client)
+    rt.close()
+    fleet.close()
+
+
+def test_stats_schema_shared_and_versioned(small):
+    """Every client's stats() carries the same versioned core schema, so
+    loadgen/bench drivers read any of the three without isinstance."""
+    _, model, imgs = small
+    shared = {"stats_version", "requests", "images", "batches", "fps",
+              "occupancy", "pad_waste", "padded_rows", "total_rows",
+              "buckets", "wall_s", "paper_fps", "realtime",
+              "latency_p50_s", "latency_p95_s", "latency_p99_s",
+              "latency_mean_s"}
+    eng = MicroBatchEngine(model)
+    eng.submit(imgs[:2])
+    eng.close()                             # protocol close == run()
+    clients = {"engine": eng.stats()}
+    with AsyncServeRuntime(model,
+                           policy=ServePolicy(max_wait_ms=2.0)) as rt:
+        rt.submit(imgs[:2]).result(timeout=30)
+    clients["runtime"] = rt.stats()
+    with ServeFleet(model, replicas=2,
+                    policy=ServePolicy(max_wait_ms=2.0)) as fleet:
+        fleet.submit(imgs[:2]).result(timeout=30)
+    clients["fleet"] = fleet.stats()
+    for name, st in clients.items():
+        missing = shared - set(st)
+        assert not missing, (name, missing)
+        assert st["stats_version"] == SERVE_STATS_VERSION
+        assert st["requests"] == 1 and st["images"] == 2
+    # async surfaces add queue metrics; the fleet adds its replica table
+    for name in ("runtime", "fleet"):
+        assert {"queued_images", "requests_rejected",
+                "requests_failed"} <= set(clients[name])
+    assert clients["fleet"]["replicas"] == 2
+    assert len(clients["fleet"]["replica_stats"]) == 2
+
+
+def test_sync_engine_drives_run_open_loop(small):
+    """The sync engine is a ServeClient too: the loadgen drives it through
+    the same protocol (result() drains the queue in-thread)."""
+    _, model, _ = small
+    trace = [Arrival(t_s=0.001 * (k + 1), n_images=1 + k % 3)
+             for k in range(5)]
+    eng = MicroBatchEngine(model)
+    m = run_open_loop(eng, trace, image_maker(model.input_shape()[1:],
+                                              seed=11), slo_ms=10_000.0)
+    assert m["requests_dropped"] == 0 and m["requests_rejected"] == 0
+    assert m["images_completed"] == sum(a.n_images for a in trace)
+
+
+# ---------------------------------------------------------------------------
+# fleet scheduler: placement is pure and replays from a pinned table
+# ---------------------------------------------------------------------------
+
+def fleet_sched(n=2, max_wait_ms=10.0, **kw):
+    return FleetScheduler((2, 8), ServePolicy(max_wait_ms=max_wait_ms, **kw),
+                          n_replicas=n)
+
+
+def test_fleet_placement_decision_table():
+    s = fleet_sched(n=2)
+    # no history: free replicas tie on estimate 0 -> lowest index, and the
+    # base wait-vs-dispatch table is untouched
+    d = s.decide(backlog=8, oldest_submit_s=0.0, now_s=0.0)
+    assert (d.action, d.bucket, d.rows, d.replica) == ("dispatch", 8, 8, 0)
+    assert s.decide(backlog=0, oldest_submit_s=None, now_s=0.0).action == \
+        "idle"
+    # replica 0 is observed slower than replica 1: placement flips
+    s.observe_step(8, 0.040, replica=0)
+    s.observe_step(8, 0.010, replica=1)
+    d = s.decide(backlog=8, oldest_submit_s=0.0, now_s=0.0)
+    assert d.replica == 1
+    # the faster replica busy: the slower free one gets the chunk
+    d = s.decide(backlog=8, oldest_submit_s=0.0, now_s=0.0,
+                 busy=(False, True))
+    assert d.replica == 0
+    # everyone busy: a bounded wait, never a dispatch nobody can run
+    d = s.decide(backlog=8, oldest_submit_s=0.0, now_s=0.0,
+                 busy=(True, True))
+    assert d.action == "wait" and d.reason == "all replicas busy"
+    assert d.wait_s == pytest.approx(0.010)
+    # wait/idle decisions replay identically given identical inputs
+    assert s.decide(backlog=8, oldest_submit_s=0.0, now_s=0.0) == \
+        s.decide(backlog=8, oldest_submit_s=0.0, now_s=0.0)
+
+
+def test_fleet_placement_class_conditioned_estimates():
+    """Sparse and dense traffic get separate per-replica EWMAs: the same
+    bucket routes to different replicas depending on the occupancy class —
+    SLO pressure places batches on the replica whose class estimate meets
+    the deadline."""
+    s = fleet_sched(n=2, sparse_occupancy=0.35)
+    # replica 0 is fast on sparse batches, replica 1 fast on dense
+    s.observe_step(2, 0.010, occupancy=0.1, replica=0)
+    s.observe_step(2, 0.050, occupancy=0.8, replica=0)
+    s.observe_step(2, 0.040, occupancy=0.1, replica=1)
+    s.observe_step(2, 0.015, occupancy=0.8, replica=1)
+    free = (False, False)
+    assert s.place(2, busy=free, occupancy=0.1) == 0
+    assert s.place(2, busy=free, occupancy=0.9) == 1
+    # with no explicit occupancy the running EWMA picks the class
+    assert s.replica_estimate(0, 2, 0.1) == pytest.approx(0.010)
+    assert s.replica_estimate(1, 2, 0.9) == pytest.approx(0.015)
+    # a fresh replica (no history) borrows the fleet-wide estimate
+    s3 = fleet_sched(n=3)
+    s3.observe_step(2, 0.020, replica=0)
+    assert s3.replica_estimate(2, 2) == s3.service_estimate(2)
+
+
+def test_fleet_scheduler_validates_busy_mask_and_counts():
+    with pytest.raises(ValueError, match="n_replicas"):
+        fleet_sched(n=0)
+    s = fleet_sched(n=2)
+    with pytest.raises(ValueError, match="busy mask"):
+        s.decide(backlog=8, oldest_submit_s=0.0, now_s=0.0,
+                 busy=(True,))
+
+
+# ---------------------------------------------------------------------------
+# fleet runtime: determinism, lifecycle, hot swap
+# ---------------------------------------------------------------------------
+
+def test_fleet_identical_trace_one_vs_n_replicas_bit_identical(small):
+    """The tentpole acceptance property: the SAME request trace through 1,
+    2, and 3 replicas yields bit-identical labels, all matching direct
+    classify()."""
+    _, model, imgs = small
+    reqs = trace_requests(imgs)
+    per_n = {}
+    for n in (1, 2, 3):
+        with ServeFleet(model, replicas=n,
+                        policy=ServePolicy(max_wait_ms=2.0)) as fleet:
+            handles = [fleet.submit(r) for r in reqs]
+            per_n[n] = [h.result(timeout=30) for h in handles]
+    assert per_n[1] == per_n[2] == per_n[3]
+    want = np.asarray(model.classify(imgs)).tolist()
+    flat = [lab for labs in per_n[2] for lab in labs]
+    assert flat == want[:len(flat)]
+
+
+def test_fleet_construction_contract(small):
+    _, model, _ = small
+    with pytest.raises(ValueError, match="replicas"):
+        ServeFleet(model, replicas=0)
+    with pytest.raises(ValueError, match="pace_fps"):
+        ServeFleet(model, replicas=1, pace_fps=0)
+    with pytest.raises(ValueError, match="either policy or"):
+        ServeFleet(model, replicas=2, policy=ServePolicy(),
+                   scheduler=FleetScheduler((2, 8), n_replicas=2))
+    with pytest.raises(ValueError, match="placement"):
+        ServeFleet(model, replicas=2,
+                   scheduler=ContinuousBatchingScheduler((2, 8)))
+    with pytest.raises(ValueError, match="2 replicas"):
+        ServeFleet(model, replicas=3,
+                   scheduler=FleetScheduler((2, 8), n_replicas=2))
+
+
+def test_fleet_lifecycle_health_and_probe(small):
+    _, model, imgs = small
+    fleet = ServeFleet(model, replicas=2)
+    assert all(r["state"] == "created"
+               for r in fleet.health()["replicas"])
+    fleet.start()
+    h = fleet.health()
+    assert all(r["state"] == "ready" and r["warmup_s"] is not None
+               for r in h["replicas"])
+    probes = fleet.probe()
+    assert all(p["ok"] and p["probe_s"] is not None for p in probes)
+    # drain replica 0: it takes no work, the fleet keeps serving
+    fleet.drain_replica(0)
+    assert fleet.submit(imgs[:3]).result(timeout=30) is not None
+    h = fleet.health()
+    assert h["replicas"][0]["state"] == "draining"
+    assert h["replicas"][0]["steps"] == 0
+    assert h["replicas"][1]["steps"] > 0
+    fleet.resume_replica(0)
+    assert fleet.health()["replicas"][0]["state"] == "ready"
+    fleet.close()
+    assert all(r["state"] == "stopped"
+               for r in fleet.health()["replicas"])
+    with pytest.raises(RuntimeError, match="closed"):
+        fleet.submit(imgs[:1])
+
+
+def test_fleet_hot_swap_under_load_keeps_every_promise(small):
+    """Plan hot-swap mid-traffic: requests accepted before, during, and
+    after the swap all resolve; post-swap labels are the NEW model's."""
+    cfg, model, imgs = small
+    params2 = init(jax.random.PRNGKey(42), cfg)
+    model2 = infer_compile(params2, cfg, ExecutionPlan(batch_buckets=(2, 8)))
+    model2.warmup()
+    policy = ServePolicy(max_wait_ms=2.0)
+    with ServeFleet(model, replicas=2, policy=policy) as fleet:
+        before = [fleet.submit(imgs[i:i + 2]) for i in (0, 2, 4)]
+        fleet.swap(model2, timeout=30)
+        after = [fleet.submit(imgs[i:i + 2]) for i in (6, 8)]
+        for h in before + after:
+            assert len(h.result(timeout=30)) == 2
+    assert fleet.swaps == 1
+    assert all(r["swaps"] == 1 for r in fleet.health()["replicas"])
+    want = np.asarray(model2.classify(imgs)).tolist()
+    assert [h.result() for h in after] == [want[6:8], want[8:10]]
+
+
+def test_fleet_swap_rejects_incompatible_plan(small):
+    cfg, model, _ = small
+    params = init(jax.random.PRNGKey(0), cfg)
+    other = infer_compile(params, cfg, ExecutionPlan(batch_buckets=(4,)))
+    with ServeFleet(model, replicas=1) as fleet:
+        with pytest.raises(ValueError, match="bucket set"):
+            fleet.swap(other)
+
+
+def test_fleet_step_failure_contained_to_batch():
+    """A failing replica step fails that batch's requests and counts on the
+    replica's health row; the fleet keeps serving."""
+    model = FlakyModel()
+    model.fail_next = 1
+    imgs = np.zeros((2, 4, 4, 3), np.uint8)
+    with ServeFleet(model, replicas=2,
+                    policy=ServePolicy(max_wait_ms=2.0)) as fleet:
+        bad = fleet.submit(imgs)
+        with pytest.raises(RuntimeError, match="step boom"):
+            bad.result(timeout=10)
+        ok = fleet.submit(imgs)
+        assert ok.result(timeout=10) == [0, 0]
+        stats = fleet.stats()
+        health = fleet.health()
+    assert stats["requests_failed"] == 1 and stats["requests"] == 1
+    assert sum(r["failures"] for r in health["replicas"]) == 1
+
+
+def test_fleet_queue_full_and_empty_request(small):
+    _, model, imgs = small
+    policy = ServePolicy(max_wait_ms=10_000.0, max_queue_images=3)
+    with ServeFleet(model, replicas=2, policy=policy) as fleet:
+        kept = [fleet.submit(imgs[i:i + 1]) for i in range(3)]
+        with pytest.raises(QueueFull, match="max_queue_images=3"):
+            fleet.submit(imgs[3:4])
+        empty = fleet.submit(imgs[:0])
+        assert empty.result(timeout=5) == []
+    assert all(len(k.result(timeout=1)) == 1 for k in kept)
+    assert fleet.stats()["requests_rejected"] == 1
+
+
+def test_fleet_paced_replica_sweep_scales_goodput(small):
+    """Paced replicas model fixed-rate cores: with the offered rate above
+    one core's capacity, adding a second replica must raise goodput
+    (the committed bench gates >= 1.5x; here >= 1.4 absorbs CI noise on a
+    short trace) with zero drops and full SLO attainment."""
+    _, model, _ = small
+    policy = ServePolicy(max_wait_ms=10.0, slo_ms=1000.0,
+                         max_queue_images=16)
+    trace = poisson_trace(rps=40, duration_s=1.5, seed=5,
+                          images_per_request=(1, 3))
+    rows = run_replica_sweep(
+        lambda n: ServeFleet(model, replicas=n, policy=policy,
+                             pace_fps=40).start(),
+        trace,
+        lambda: image_maker(model.input_shape()[1:], seed=6),
+        replica_counts=(1, 2), slo_ms=1000.0)
+    assert [r["replicas"] for r in rows] == [1, 2]
+    for r in rows:
+        assert r["requests_dropped"] == 0
+        assert r["slo_attainment"] == 1.0
+    assert rows[0]["goodput_scaling"] == 1.0
+    assert rows[1]["goodput_scaling"] >= 1.4, rows

@@ -114,3 +114,43 @@ def test_batch_and_cache_shardings_build():
     for leaf in jax.tree_util.tree_leaves(
             c_sh, is_leaf=lambda x: isinstance(x, NamedSharding)):
         assert isinstance(leaf, NamedSharding)
+
+
+# ---------------------------------------------------------------------------
+# the public import surface and the serving fleet's placement axis
+# ---------------------------------------------------------------------------
+
+def test_public_import_surface():
+    """``repro.sharding`` is a real public API: everything the serving
+    fleet (and training) consumes is importable from the package root and
+    declared in __all__."""
+    import repro.sharding as sharding
+    for name in ("rules", "hints", "compat", "dp_axes", "spec_for",
+                 "param_shardings", "opt_state_shardings",
+                 "batch_shardings", "cache_shardings", "serving_mesh",
+                 "replica_devices", "shard_hint", "set_mesh",
+                 "get_abstract_mesh", "abstract_mesh"):
+        assert name in sharding.__all__, name
+        assert getattr(sharding, name) is not None
+    # the package re-export is the module symbol, not a copy
+    assert sharding.replica_devices is rules.replica_devices
+    assert sharding.spec_for is rules.spec_for
+
+
+def test_serving_mesh_and_replica_devices():
+    mesh = rules.serving_mesh()
+    assert mesh.axis_names == ("data",)
+    assert mesh.devices.size == len(jax.devices())
+    with pytest.raises(ValueError, match="at least one device"):
+        rules.serving_mesh(devices=[])
+    with pytest.raises(ValueError, match="n >= 1"):
+        rules.replica_devices(0)
+    devs = rules.replica_devices(3)
+    assert len(devs) == 3
+    if len(jax.devices()) <= 1:
+        # single-device host: thread-backed fleet, no pointless device_put
+        assert devs == [None, None, None]
+    else:
+        # replicas round-robin the data axis
+        flat = list(np.asarray(mesh.devices).flat)
+        assert devs == [flat[i % len(flat)] for i in range(3)]
