@@ -397,13 +397,15 @@ class CompiledModel:
     committable artifact that replays this exact compilation.
     """
 
-    def __init__(self, *, cfg, backend, folded, plan: ExecutionPlan, fwd):
+    def __init__(self, *, cfg, backend, folded, plan: ExecutionPlan, fwd,
+                 jit: bool = True):
         self.cfg = cfg
         self.backend = backend
         self.folded = folded
         self.plan = plan
         self._fwd = fwd
-        self.buckets = plan.batch_buckets
+        self.jit = jit       # how _fwd was lowered; replicate_model re-lowers
+        self.buckets = plan.batch_buckets   # with the same choice
 
     # -- shapes -------------------------------------------------------------
 
@@ -544,7 +546,7 @@ def compile(params, cfg: SpikformerConfig, plan: ExecutionPlan | None = None,
     resolved = dataclasses.replace(plan, weight_dtype=weight_dtype,
                                    routes=routes)
     return CompiledModel(cfg=cfg, backend=backend, folded=tree,
-                         plan=resolved,
+                         plan=resolved, jit=jit,
                          fwd=lower(tree, cfg, backend, jit=jit,
                                    layer_occupancy=sparse_occ))
 
@@ -565,13 +567,14 @@ def replicate_model(model: CompiledModel, *, device=None) -> CompiledModel:
     if device is None:
         return CompiledModel(cfg=model.cfg, backend=model.backend,
                              folded=model.folded, plan=model.plan,
-                             fwd=model._fwd)
+                             fwd=model._fwd, jit=model.jit)
     folded = jax.device_put(model.folded, device)
     occ_all = model.plan.layer_occupancy or {}
     sparse_occ = {p: occ_all[p]
                   for p, r in (model.plan.routes or {}).items()
                   if r == "lut_sparse"} or None
     return CompiledModel(cfg=model.cfg, backend=model.backend, folded=folded,
-                         plan=model.plan,
+                         plan=model.plan, jit=model.jit,
                          fwd=lower(folded, model.cfg, model.backend,
+                                   jit=model.jit,
                                    layer_occupancy=sparse_occ))

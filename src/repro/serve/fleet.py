@@ -193,9 +193,14 @@ class ServeFleet:
     def close(self, timeout: float | None = None) -> None:
         """Drain the fleet and stop every worker. Every accepted request
         resolves before the last thread exits; new submits are refused the
-        moment closing begins."""
+        moment closing begins. A ``drain_replica``'d replica rejoins the
+        pool here — the final drain must be able to dispatch even if the
+        caller had drained every replica."""
         with self._cv:
             self._closing = True
+            for rep in self.replicas:
+                if rep.state == DRAINING:
+                    rep.state = READY
             started = self._started
             self._cv.notify_all()
         if not started:
@@ -337,9 +342,15 @@ class ServeFleet:
                 continue
             labels = logits[:len(work)].argmax(axis=-1)
             now = self._clock()
-            completed = []
+            completed, live = [], []
             with self._cv:
                 for (req, i), lab in zip(work, labels):
+                    if self._inflight.get(req.rid) is not req:
+                        # another replica's step failed this request while
+                        # our chunk was in flight: its bookkeeping is purged
+                        # and its future already failed — drop our result
+                        continue
+                    live.append((req, i, int(lab)))
                     req.labels[i] = int(lab)
                     self._pending[req.rid] -= 1
                     if self._pending[req.rid] == 0:
@@ -365,10 +376,10 @@ class ServeFleet:
                 rep._work = None
                 self._cv.notify_all()
             # callbacks/futures OUTSIDE the lock: user code may submit
-            for (req, i), lab in zip(work, labels):
+            for req, i, lab in live:
                 if req.on_image is not None:
                     try:
-                        req.on_image(req.rid, i, int(lab))
+                        req.on_image(req.rid, i, lab)
                     except Exception:
                         pass   # a streaming callback must not kill serving
             for req in completed:
@@ -393,12 +404,17 @@ class ServeFleet:
         failed = {}
         with self._cv:
             for req, _ in work:
-                failed.setdefault(req.rid, req)
-            self._queue = deque((req, i) for req, i in self._queue
-                                if req.rid not in failed)
-            for rid in failed:
-                self._pending.pop(rid, None)
-                self._inflight.pop(rid, None)
+                # purge/count only requests still in flight under their rid:
+                # a chunk whose request already failed on ANOTHER replica is
+                # purged (and its future failed) there — never twice
+                if self._inflight.get(req.rid) is req:
+                    failed[req.rid] = req
+            if failed:
+                self._queue = deque((req, i) for req, i in self._queue
+                                    if req.rid not in failed)
+                for rid in failed:
+                    del self._pending[rid]
+                    del self._inflight[rid]
             self.failed_requests += len(failed)
             rep.failures += 1
             rep._work = None

@@ -470,3 +470,16 @@ def test_replicate_model_onto_device_recompiles_bit_exact(small):
     assert placed.plan is model.plan
     assert placed._fwd is not model._fwd    # per-device executable
     exact(placed.logits(img), model.logits(img))
+
+
+def test_replicate_model_preserves_jit_choice(small):
+    """A jit=False template replicates to jit=False steps — a replica must
+    behave like the model it replicates, on or off device."""
+    cfg, params, img = small
+    model = infer_compile(params, cfg, ExecutionPlan(batch_buckets=(2,)),
+                          jit=False)
+    assert model.jit is False
+    twin = replicate_model(model)
+    placed = replicate_model(model, device=jax.devices()[0])
+    assert twin.jit is False and placed.jit is False
+    exact(placed.logits(img[:2]), model.logits(img[:2]))

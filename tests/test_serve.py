@@ -18,6 +18,7 @@ Three layers, three standards of proof:
   protocol with the shared versioned stats schema.
 """
 import threading
+import time
 
 import jax
 import numpy as np
@@ -702,6 +703,93 @@ def test_fleet_step_failure_contained_to_batch():
         health = fleet.health()
     assert stats["requests_failed"] == 1 and stats["requests"] == 1
     assert sum(r["failures"] for r in health["replicas"]) == 1
+
+
+class RaceModel:
+    """Forces two chunks of one request to be IN FLIGHT on two replicas at
+    the same time (a barrier inside step), then fails the first
+    ``fail_calls`` steps — the cross-replica failure-containment race."""
+    buckets = (2,)
+
+    def __init__(self, fail_calls=1):
+        self.fail_calls = fail_calls
+        self.barrier = threading.Barrier(2)
+        self.lock = threading.Lock()
+        self.calls = 0
+
+    def input_shape(self, bucket=None):
+        return (2, 4, 4, 3)
+
+    def step(self, batch):
+        with self.lock:
+            self.calls += 1
+            n = self.calls
+        if n <= 2:
+            self.barrier.wait(timeout=10)   # both chunks in flight together
+            if n > self.fail_calls:
+                time.sleep(0.05)   # lose the race: the purge lands first
+        if n <= self.fail_calls:
+            raise RuntimeError("step boom")
+        return np.zeros((len(batch), 10), np.float32)
+
+
+def test_fleet_cross_replica_failure_does_not_kill_fleet():
+    """One request's chunks in flight on two replicas when one step fails:
+    the surviving replica's completion must skip the purged bookkeeping,
+    not KeyError into a whole-fleet abort."""
+    model = RaceModel(fail_calls=1)
+    imgs = np.zeros((4, 4, 4, 3), np.uint8)
+    with ServeFleet(model, replicas=2,
+                    policy=ServePolicy(max_wait_ms=1.0)) as fleet:
+        bad = fleet.submit(imgs)        # 4 images -> two bucket-2 chunks
+        with pytest.raises(RuntimeError, match="step boom"):
+            bad.result(timeout=10)
+        # bad's future fails the moment the FIRST chunk's step raises; the
+        # surviving chunk is still in flight — wait for its completion
+        # bookkeeping to land before judging fleet health (the pre-fix
+        # KeyError->abort fires exactly there)
+        deadline = time.time() + 5
+        while time.time() < deadline and any(
+                r._work is not None for r in fleet.replicas):
+            time.sleep(0.01)
+        ok = fleet.submit(imgs[:2])     # the fleet survived, still serves
+        assert ok.result(timeout=10) == [0, 0]
+        stats = fleet.stats()
+    assert stats["requests_failed"] == 1
+    assert stats["requests"] == 1
+
+
+def test_fleet_same_request_failing_on_two_replicas_counts_once():
+    """Both chunks of one request fail, on different replicas: the request
+    fails once — failed_requests must not double-count the rid."""
+    model = RaceModel(fail_calls=2)
+    imgs = np.zeros((4, 4, 4, 3), np.uint8)
+    with ServeFleet(model, replicas=2,
+                    policy=ServePolicy(max_wait_ms=1.0)) as fleet:
+        bad = fleet.submit(imgs)
+        with pytest.raises(RuntimeError, match="step boom"):
+            bad.result(timeout=10)
+        ok = fleet.submit(imgs[:2])
+        assert ok.result(timeout=10) == [0, 0]
+        stats = fleet.stats()
+        health = fleet.health()
+    assert stats["requests_failed"] == 1
+    assert sum(r["failures"] for r in health["replicas"]) == 2
+
+
+def test_fleet_close_resumes_drained_replicas(small):
+    """close() finishes the drain even when the caller drained EVERY
+    replica first: queued work still dispatches and every accepted
+    request resolves (a fully-drained fleet must not hang close)."""
+    _, model, imgs = small
+    fleet = ServeFleet(model, replicas=2,
+                       policy=ServePolicy(max_wait_ms=5.0)).start()
+    fleet.drain_replica(0)
+    fleet.drain_replica(1)
+    req = fleet.submit(imgs[:3])
+    fleet.close(timeout=30)
+    assert len(req.result(timeout=1)) == 3
+    assert fleet.stats()["requests_failed"] == 0
 
 
 def test_fleet_queue_full_and_empty_request(small):
