@@ -16,7 +16,12 @@ smoke, full vs full — timings across configs are not comparable):
     hosts and are never compared — only exactness and row presence gate);
   * serving-under-load rows are non-lossy keyed by (rps, replicas) with
     zero dropped-but-accepted requests; paced fleet rows additionally
-    gate SLO attainment 1.0 and 1->2 replica goodput scaling >= 1.5.
+    gate SLO attainment 1.0 and 1->2 replica goodput scaling >= 1.5;
+  * event-workload rows (``serving_events``) are non-lossy keyed by
+    (trace, replicas), must shed nothing (zero drops AND zero rejections
+    — the committed trace is sized under capacity), must hit attainment
+    1.0, and must keep the replay determinism flags true (same trace
+    twice → identical labels; fleet labels match single-replica labels).
 
   PYTHONPATH=src python benchmarks/compare_bench.py current.json \
       [--baseline BENCH_infer.json] [--min-ratio 0.4]
@@ -176,6 +181,52 @@ def compare(current: dict, baseline: dict, *, min_ratio: float):
                       key=lambda k: (k[0], k[1] is not None, k[1] or 0)):
         failures.append(
             f"serving-under-load row (rps, replicas)={key} present in the "
+            f"committed baseline but missing from the current record")
+    # event-workload rows (bursty DVS trace replay — the trace is sized
+    # well under capacity, so ANY shed request is a serving bug, and the
+    # replay contract is bit-identical labels: same trace twice at one
+    # replica -> same labels_sha; fleet labels match single-replica
+    # labels. Cross-RUN label checksums are deliberately NOT compared —
+    # logits depend on platform float behavior; determinism is gated
+    # within each run, where the flags were computed.)
+    def events_key(s):
+        return (s["trace"], s["replicas"])
+
+    for s in current.get("serving_events", []):
+        p99 = s.get("latency_p99_s")
+        p99_us = "n/a" if p99 is None else f"{p99 * 1e6:.0f}us"
+        print(f"serving_events {s['trace']} replicas={s['replicas']}: "
+              f"{s['windows']} windows, goodput {s['goodput_fps']:.1f} fps, "
+              f"p99 {p99_us}, attainment {s.get('slo_attainment')}, "
+              f"dispersion {s.get('dispersion_index')}, "
+              f"deterministic={s.get('deterministic')}, "
+              f"labels_match_single={s.get('labels_match_single')}")
+        if s.get("requests_dropped", 0):
+            failures.append(
+                f"serving_events {events_key(s)} dropped "
+                f"{s['requests_dropped']} accepted request(s)")
+        if s.get("requests_rejected", 0):
+            failures.append(
+                f"serving_events {events_key(s)} rejected "
+                f"{s['requests_rejected']} request(s) of an under-capacity "
+                f"trace")
+        if s.get("slo_attainment") != 1.0:
+            failures.append(
+                f"serving_events {events_key(s)}: slo_attainment "
+                f"{s.get('slo_attainment')} != 1.0")
+        if s.get("deterministic") is False:
+            failures.append(
+                f"serving_events {events_key(s)}: double replay of the "
+                f"same trace produced different labels")
+        if s.get("labels_match_single") is False:
+            failures.append(
+                f"serving_events {events_key(s)}: fleet labels diverge "
+                f"from the single-replica replay")
+    base_ev = {events_key(s) for s in baseline.get("serving_events", [])}
+    cur_ev = {events_key(s) for s in current.get("serving_events", [])}
+    for key in sorted(base_ev - cur_ev):
+        failures.append(
+            f"serving_events row (trace, replicas)={key} present in the "
             f"committed baseline but missing from the current record")
     if ratios:
         geomean = 1.0

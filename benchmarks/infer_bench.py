@@ -31,6 +31,13 @@ replayed through ``ServeFleet`` at 1 and 2 paced replicas
 (``pace_fps``-rate emulated cores), gated on goodput scaling and
 attainment — the multi-replica serving claim, measured.
 
+The EVENT WORKLOAD layer replays the committed synthetic DVS trace
+(``benchmarks/traces/dvs_synth_mini.jsonl``) through 1 and 2 replicas and
+records ``serving_events`` rows: the bursty ON/OFF arrival process of an
+event camera, gated zero-drop, attainment 1.0, and deterministic (same
+trace twice → identical ``labels_sha``; fleet labels match single-replica
+labels).
+
 A fourth layer, the PALLAS SWEEP, runs the Pallas kernel routes (VMEM
 byte-LUT gather, grouped unpack-dot) against their CPU fold-order oracles
 at a tail-timestep/odd-K shape. On a CPU host the kernels execute under
@@ -62,12 +69,14 @@ from repro.infer import (ExecutionPlan, MicroBatchEngine, chunk_occupancy,
 from repro.kernels import lut_matmul as lut
 from repro.kernels import ops
 from repro.kernels.lut_matmul import sparse_budget
+from repro.events import TRACE_VERSION, load_trace, replay_trace
 from repro.serve import (AsyncServeRuntime, ServeFleet, ServePolicy,
                          image_maker, poisson_trace, run_open_loop,
                          run_replica_sweep)
 
 REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
 DEFAULT_OUT = REPO_ROOT / "BENCH_infer.json"
+DEFAULT_TRACE = REPO_ROOT / "benchmarks" / "traces" / "dvs_synth_mini.jsonl"
 
 
 def benchmark_model(model, *, batches: int = 4, seed: int = 0,
@@ -353,6 +362,78 @@ def run_fleet_load(model, *, timesteps: int, weight_dtype: str,
     } for row in rows]
 
 
+def run_serving_events(*, trace_path=None, slo_ms: float = 400.0,
+                       seed: int = 0, replica_counts=(1, 2)) -> list:
+    """Event-workload rows: the committed DVS mini-trace replayed through
+    the serving stack at each replica count — the bursty ON/OFF arrival
+    process a real event camera produces, not a Poisson approximation.
+
+    Determinism is part of the measurement, not a side note. The
+    single-replica point replays the SAME trace twice and records
+    ``deterministic`` (within-run ``labels_sha`` equality); every
+    multi-replica point records ``labels_match_single`` (its labels vs
+    the single-replica replay's). Both flags plus zero drops / zero
+    rejections / attainment 1.0 are gated by ``compare_bench.py`` — the
+    trace is sized well under one replica's capacity on purpose, so any
+    shed request is a serving bug, not an overload artifact."""
+    path = pathlib.Path(trace_path or DEFAULT_TRACE)
+    trace = load_trace(path)
+    cfg = dataclasses.replace(
+        SpikformerConfig().scaled(img_size=trace.height, dim=32, depth=1),
+        in_channels=trace.channels)
+    params = spik_init(jax.random.PRNGKey(seed), cfg)
+    model = infer_compile(params, cfg,
+                          ExecutionPlan(backend="packed",
+                                        batch_buckets=(2, 8)))
+    compile_s = model.warmup()
+    policy = ServePolicy(max_wait_ms=10.0, slo_ms=slo_ms,
+                         max_queue_images=64)
+
+    def replay(n: int) -> dict:
+        client = (ServeFleet(model, replicas=n, policy=policy).start()
+                  if n > 1 else
+                  AsyncServeRuntime(model, policy=policy).start())
+        try:
+            m = replay_trace(trace, client, slo_ms=slo_ms)
+            m["queue_depth_peak"] = client.stats()["queue_depth_peak"]
+        finally:
+            client.close()
+        return m
+
+    rows, single_sha = [], None
+    for n in replica_counts:
+        m = replay(n)
+        row = {
+            "trace": path.name,
+            "trace_version": TRACE_VERSION,
+            "replicas": int(n),
+            "windows": m["windows"],
+            "trace_duration_s": m["trace_duration_s"],
+            "compile_s": round(compile_s, 3),
+            "slo_ms": slo_ms,
+            "offered_rps": m["offered_rps"],
+            "requests_offered": m["requests_offered"],
+            "requests_accepted": m["requests_accepted"],
+            "requests_rejected": m["requests_rejected"],
+            "requests_dropped": m["requests_dropped"],
+            "goodput_fps": m["goodput_fps"],
+            "latency_p99_s": m["latency_p99_s"],
+            "slo_attainment": m["slo_attainment"],
+            "dispersion_index": m["dispersion_index"],
+            "peak_to_mean_rate": m["peak_to_mean_rate"],
+            "queue_depth_peak": m["queue_depth_peak"],
+            "labels_sha": m["labels_sha"],
+        }
+        if n == min(replica_counts):
+            again = replay(n)
+            row["deterministic"] = again["labels_sha"] == m["labels_sha"]
+            single_sha = m["labels_sha"]
+        elif single_sha is not None:
+            row["labels_match_single"] = m["labels_sha"] == single_sha
+        rows.append(row)
+    return rows
+
+
 def run(*, batch_size: int = 8, batches: int = 4, repeats: int = 3,
         seed: int = 0, img_size: int = 32, dim: int = 64, depth: int = 2,
         mode: str = "full",
@@ -367,6 +448,9 @@ def run(*, batch_size: int = 8, batches: int = 4, repeats: int = 3,
         fleet_rps: float = 40.0,
         fleet_pace_fps: float = 40.0,
         fleet_slo_ms: float = 1000.0,
+        events_trace=None,
+        events_replicas=(1, 2),
+        events_slo_ms: float = 400.0,
         occupancy_rates=(0.1, 0.2, 0.3),
         occupancy_shape=(512, 256, 256),
         occupancy_repeats: int = 5,
@@ -421,6 +505,11 @@ def run(*, batch_size: int = 8, batches: int = 4, repeats: int = 3,
         rps=fleet_rps, duration_s=max(load_duration_s, 2.0),
         slo_ms=fleet_slo_ms, replica_counts=fleet_replicas,
         pace_fps=fleet_pace_fps, seed=seed)
+    # the event workload compiles its own DVS-shaped model (2 input
+    # channels, sensor-sized), so it does not share the serving cache
+    serving_events = run_serving_events(
+        trace_path=events_trace, slo_ms=events_slo_ms,
+        seed=seed, replica_counts=events_replicas)
 
     # PR-1-compatible trajectory fields come from the (4, float32) point
     # when the sweep carries one, else the first point
@@ -449,6 +538,7 @@ def run(*, batch_size: int = 8, batches: int = 4, repeats: int = 3,
         "pallas_sweep": pallas_sweep,
         "serving": serving,
         "serving_load": serving_load,
+        "serving_events": serving_events,
         "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
     }
     return record

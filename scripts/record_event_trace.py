@@ -1,0 +1,47 @@
+#!/usr/bin/env python
+"""Regenerate the committed synthetic DVS mini-trace fixture.
+
+    PYTHONPATH=src python scripts/record_event_trace.py \
+        --out benchmarks/traces/dvs_synth_mini.jsonl
+
+The fixture is the deterministic synthetic trace the event-serving CI
+smoke and the ``serving_events`` bench rows replay: a moving edge over
+the first quarter (steady arrivals) followed by flicker bursts (ON/OFF
+arrival bursts with silent gaps — empty windows are skipped at capture,
+so the burstiness survives into the ARRIVAL process, which is the point).
+Same seed → byte-identical file; the name says "synth" because it is —
+a recorded-camera trace drops in whenever one lands, same format.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+from repro.events import record_trace
+from repro.launch.serve_spikformer import synth_event_trace
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="benchmarks/traces/dvs_synth_mini.jsonl")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--height", type=int, default=16)
+    ap.add_argument("--width", type=int, default=16)
+    args = ap.parse_args(argv)
+
+    trace = synth_event_trace(seed=args.seed, height=args.height,
+                              width=args.width)
+    n = record_trace(
+        args.out, height=trace.height, width=trace.width,
+        window_us=trace.window_us, bins=trace.bins, payload=trace.payload,
+        arrivals=trace.arrivals,
+        meta={"generator": "scripts/record_event_trace.py",
+              "seed": args.seed})
+    events = sum(len(a.events) for a in trace.arrivals)
+    print(json.dumps({"out": args.out, "arrivals": n, "events": events,
+                      "duration_s": trace.duration_s,
+                      "sensor": [trace.height, trace.width]}))
+
+
+if __name__ == "__main__":
+    main()

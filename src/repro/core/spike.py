@@ -18,6 +18,7 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 _POWERS = 2 ** jnp.arange(8, dtype=jnp.uint8)
 
@@ -65,6 +66,23 @@ def pack_timesteps(spikes, *, time_axis: int = 0):
     shifts = jnp.arange(8, dtype=jnp.uint8).reshape(
         (1, 8) + (1,) * (x.ndim - 2))
     return jnp.bitwise_or.reduce(x << shifts, axis=1)
+
+
+def packed_occupancy(packed, t: int) -> float:
+    """Mean firing rate of a ``(G, ...)`` packed spike tensor over its ``t``
+    live timesteps: set bits / (t * neurons). Bits past ``t - 1`` in the
+    last group are zero by the ``pack_timesteps`` invariant, so a plain
+    popcount over every byte is exact — no unpack, no masking. Accepts
+    numpy or jax input (the readout is a host-side float either way); this
+    is the firing-rate number the serving occupancy EWMAs and the event
+    front end's per-window readout share."""
+    g = packed.shape[0]
+    assert g == num_plane_groups(t), (g, t)
+    x = np.asarray(packed, np.uint8)
+    neurons = x.size // g if g else 0
+    if not neurons:
+        return 0.0
+    return float(np.unpackbits(x.reshape(-1)).sum()) / (t * neurons)
 
 
 def unpack_timesteps(packed, t: int, *, time_axis: int = 0,

@@ -51,7 +51,8 @@ from jax import lax
 from . import registry
 from ..core import unified
 from ..core.lif import V_TH, tflif
-from ..core.spike import bitplanes_u8, rate_decode, space_to_depth
+from ..core.spike import (bitplanes_u8, packed_occupancy, rate_decode,
+                          space_to_depth)
 from ..kernels import ops
 from ..kernels import lut_matmul as lut
 
@@ -66,11 +67,11 @@ from ..kernels import lut_matmul as lut
 
 def spike_occupancy(x_packed, t: int) -> float:
     """Firing rate of a packed spike tensor: fraction of set bits over the
-    ``t`` live planes. Bits past t-1 are zero by the packing invariant, so
-    a plain popcount over all bytes divided by live positions is exact."""
-    counts = int(lax.population_count(x_packed).astype(jnp.int32).sum())
-    neurons = x_packed.size // x_packed.shape[0]
-    return counts / float(t * neurons) if neurons else 0.0
+    ``t`` live planes. One implementation — ``core.spike.packed_occupancy``
+    — shared with the event front end's per-window readout, so the number
+    a DVS window reports at ingestion is the number serving calibrates
+    with."""
+    return packed_occupancy(x_packed, t)
 
 
 def chunk_occupancy(x_packed, t: int) -> float:

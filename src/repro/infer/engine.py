@@ -42,9 +42,14 @@ import numpy as np
 PAPER_FPS = 30.0   # VESTA's reported real-time Spikformer V2 rate
 
 # Version of the shared ``stats()`` schema every ServeClient implements.
-# Bump when a shared key is renamed or its meaning changes; additive
-# client-specific keys (queue depth, replica table) do not bump it.
-SERVE_STATS_VERSION = 1
+# Bump when a shared key is renamed, its meaning changes, or a key every
+# client must report is added; additive client-specific keys (replica
+# table) do not bump it.
+#   v2: ``queue_depth_peak`` joined the shared vocabulary — the queue-depth
+#       high-watermark (max images queued at any submit), the backpressure
+#       number bursty event-stream arrivals made necessary: a mean queue
+#       depth hides a burst that grazed the admission bound.
+SERVE_STATS_VERSION = 2
 
 
 @typing.runtime_checkable
@@ -244,15 +249,17 @@ def latency_summary(latencies_s, *, prefix: str = "latency_") -> dict:
 
 
 def serve_stats(*, acct: StepAccounting, done, buckets,
+                queue_depth_peak: int = 0,
                 extra: dict | None = None) -> dict:
     """The versioned common ``ServeClient.stats()`` schema — ONE builder,
     so the shared keys (``fps``, ``occupancy``, ``pad_waste``,
-    ``latency_*``) cannot drift between the sync engine, the async
-    runtime, and the fleet. ``extra`` adds client-specific keys (queue
-    depth, rejections, per-replica table) without touching the shared
-    vocabulary."""
+    ``latency_*``, ``queue_depth_peak``) cannot drift between the sync
+    engine, the async runtime, and the fleet. ``extra`` adds
+    client-specific keys (rejections, per-replica table) without touching
+    the shared vocabulary."""
     out = {
         "stats_version": SERVE_STATS_VERSION,
+        "queue_depth_peak": int(queue_depth_peak),
         "requests": len(done),
         "images": acct.images,
         "batches": acct.batches,
@@ -287,6 +294,7 @@ class MicroBatchEngine:
         self.done: list[Request] = []
         self._pending: dict[int, int] = {}  # rid -> images left
         self._next_rid = 0
+        self.queue_depth_peak = 0           # high-watermark of queued images
         self.acct = StepAccounting()
 
     # accounting attribute surface predates StepAccounting; keep it readable
@@ -358,6 +366,7 @@ class MicroBatchEngine:
         self._pending[req.rid] = len(req.images)
         for i in range(len(req.images)):
             self.queue.append((req, i))
+        self.queue_depth_peak = max(self.queue_depth_peak, len(self.queue))
         return req
 
     def pick_bucket(self, backlog: int) -> int:
@@ -428,4 +437,5 @@ class MicroBatchEngine:
         """Serving metrics over everything processed so far (the shared
         ServeClient schema)."""
         return serve_stats(acct=self.acct, done=self.done,
-                           buckets=self.buckets)
+                           buckets=self.buckets,
+                           queue_depth_peak=self.queue_depth_peak)

@@ -97,6 +97,14 @@ def main(argv=None):
                          "at this many images/second (labels stay real; "
                          "scaling curves measure placement, not host "
                          "cores)")
+    ap.add_argument("--events", action="store_true",
+                    help="serve the event-stream workload: replay a DVS "
+                         "trace (--trace, or a synthesized one) through "
+                         "the serving stack as per-window count frames")
+    ap.add_argument("--trace", default=None,
+                    help="events: path to a recorded JSONL event trace "
+                         "(repro.events.trace format); the model is "
+                         "compiled to the trace header's sensor shape")
     ap.add_argument("--smoke", action="store_true",
                     help="CI smoke: few requests, assert completion/shapes")
     args = ap.parse_args(argv)
@@ -106,6 +114,9 @@ def main(argv=None):
         args.images_per_request = min(args.images_per_request, 2)
         args.rps = min(args.rps, 60.0)
         args.duration = min(args.duration, 1.5)
+
+    if args.events:
+        return main_events(args)
 
     cfg = SpikformerConfig()
     if args.reduce:
@@ -222,6 +233,111 @@ def main_async(model, args, compile_s: float):
                           "completed_fps": metrics["completed_fps"],
                           "goodput_fps": metrics["goodput_fps"],
                           "slo_attainment": metrics["slo_attainment"]}))
+    return summary
+
+
+def synth_event_trace(*, seed: int, height: int = 16, width: int = 16):
+    """A deterministic in-memory stand-in when no --trace is given: a
+    moving edge plus flicker bursts, windowed exactly as
+    ``scripts/record_event_trace.py`` commits its fixture."""
+    from ..events import (EventTrace, TraceArrival, flicker_burst_events,
+                          merge_streams, moving_edge_events)
+    window_us = 20_000
+    duration_us = 800_000
+    stream = merge_streams(
+        moving_edge_events(height=height, width=width,
+                           duration_us=duration_us // 4, seed=seed),
+        flicker_burst_events(height=height, width=width,
+                             duration_us=duration_us, seed=seed + 1,
+                             bursts=3))
+    arrivals = []
+    for w in range(duration_us // window_us):
+        ev = stream.slice_time(w * window_us, (w + 1) * window_us)
+        if len(ev):
+            arrivals.append(TraceArrival(
+                t_s=(w + 1) * window_us / 1e6, window=w,
+                events=ev.shift_time(-w * window_us)))
+    return EventTrace(height=height, width=width, window_us=window_us,
+                      bins=8, payload="events", arrivals=tuple(arrivals))
+
+
+def main_events(args):
+    """Event-stream serving: replay a DVS trace's windows (count frames at
+    the recorded arrival times) through the runtime or fleet; in --smoke,
+    additionally replay it TWICE and assert the labels are bit-identical
+    — the trace-replay determinism contract, as a CI gate."""
+    from ..events import load_trace, replay_trace
+    trace = (load_trace(args.trace) if args.trace
+             else synth_event_trace(seed=args.seed))
+    if trace.height != trace.width:
+        raise SystemExit(
+            f"trace sensor is {trace.height}x{trace.width}; the Spikformer "
+            f"front end serves square inputs — re-record or crop")
+    cfg = dataclasses.replace(
+        SpikformerConfig().scaled(img_size=trace.height, dim=32, depth=1),
+        in_channels=trace.channels)
+    params = spik_init(jax.random.PRNGKey(args.seed), cfg)
+    plan = (ExecutionPlan.from_json(open(args.plan).read()) if args.plan
+            else ExecutionPlan(batch_buckets=(2, 8)))
+    over = {}
+    if args.backend is not None:
+        over["backend"] = args.backend
+    if args.buckets is not None:
+        over["batch_buckets"] = tuple(int(b) for b in args.buckets.split(","))
+    if args.weight_dtype is not None:
+        over["weight_dtype"] = args.weight_dtype
+    if over:
+        plan = dataclasses.replace(plan, **over)
+    model = compile(params, cfg, plan)
+    compile_s = model.warmup()
+    policy = ServePolicy(max_wait_ms=args.max_wait_ms, slo_ms=args.slo_ms,
+                         max_queue_images=args.queue_depth)
+
+    def run_once():
+        if args.replicas > 1:
+            client = ServeFleet(model, replicas=args.replicas, policy=policy,
+                                pace_fps=args.pace_fps)
+        else:
+            client = AsyncServeRuntime(model, policy=policy)
+        with client:
+            metrics = replay_trace(trace, client, slo_ms=args.slo_ms)
+        metrics["runtime"] = client.stats()
+        return metrics
+
+    metrics = run_once()
+    summary = {
+        "backend": model.backend.name,
+        "weight_dtype": model.weight_dtype,
+        "compile_s": round(compile_s, 3),
+        "mode": "event_replay",
+        "trace": args.trace or "synthetic",
+        "sensor": [trace.height, trace.width, trace.channels],
+        "window_us": trace.window_us,
+        "replicas": args.replicas,
+        **{k: v for k, v in metrics.items() if k != "labels"},
+    }
+    print(json.dumps(summary))
+
+    if args.smoke:
+        # the event-serving CI contract: every window served (zero drops,
+        # zero shed at smoke rates), on time, and deterministically
+        assert metrics["requests_dropped"] == 0, summary
+        assert metrics["requests_rejected"] == 0, summary
+        assert metrics["slo_attainment"] == 1.0, summary
+        n_classes = cfg.num_classes
+        for labs in metrics["labels"]:
+            assert labs is not None and len(labs) == 1, labs
+            assert 0 <= labs[0] < n_classes, labs
+        replay = run_once()
+        assert replay["labels_sha"] == metrics["labels_sha"], (
+            "trace replay is not deterministic",
+            replay["labels_sha"], metrics["labels_sha"])
+        print(json.dumps({"smoke": "ok", "mode": "event_replay",
+                          "windows": metrics["windows"],
+                          "replicas": args.replicas,
+                          "labels_sha": metrics["labels_sha"],
+                          "slo_attainment": metrics["slo_attainment"],
+                          "dispersion_index": metrics["dispersion_index"]}))
     return summary
 
 

@@ -10,8 +10,9 @@ fleet) speak the ``ServeClient`` protocol — submit / stats / close —
 with one versioned stats schema. See README.md in this directory."""
 from ..infer.engine import SERVE_STATS_VERSION, ServeClient
 from .fleet import ServeFleet
-from .loadgen import (Arrival, image_maker, poisson_trace, run_open_loop,
-                      run_replica_sweep)
+from .loadgen import (Arrival, burst_trace, burstiness, image_maker,
+                      poisson_trace, replay_decisions, run_open_loop,
+                      run_replica_sweep, validate_trace)
 from .runtime import AsyncRequest, AsyncServeRuntime
 from .scheduler import (ContinuousBatchingScheduler, Decision,
                         FleetScheduler, QueueFull, ServePolicy)
@@ -21,6 +22,7 @@ __all__ = [
     "AsyncRequest", "AsyncServeRuntime", "ServeFleet",
     "ContinuousBatchingScheduler", "FleetScheduler", "Decision",
     "QueueFull", "ServePolicy",
-    "Arrival", "image_maker", "poisson_trace", "run_open_loop",
-    "run_replica_sweep",
+    "Arrival", "image_maker", "poisson_trace", "burst_trace", "burstiness",
+    "replay_decisions", "run_open_loop", "run_replica_sweep",
+    "validate_trace",
 ]

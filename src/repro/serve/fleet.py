@@ -154,6 +154,7 @@ class ServeFleet:
         self._next_rid = 0
         self.done: list[AsyncRequest] = []
         self.rejected = 0
+        self.queue_depth_peak = 0           # high-watermark of queued images
         self.acct = StepAccounting()
         self.failed_requests = 0
         self.swaps = 0
@@ -253,6 +254,8 @@ class ServeFleet:
             self._inflight[rid] = req
             for i in range(len(arr)):
                 self._queue.append((req, i))
+            self.queue_depth_peak = max(self.queue_depth_peak,
+                                        len(self._queue))
             must_start = not self._started
             self._cv.notify_all()
         if must_start:
@@ -573,6 +576,7 @@ class ServeFleet:
         with self._cv:
             done = list(self.done)
             acct = dataclasses.replace(self.acct)
+            queue_peak = self.queue_depth_peak
             extra = {
                 "queued_images": len(self._queue),
                 "requests_rejected": self.rejected,
@@ -598,4 +602,5 @@ class ServeFleet:
                 extra["slo_ms"] = self.scheduler.policy.slo_ms
                 extra["slo_attainment"] = round(within / len(done), 4)
         return serve_stats(acct=acct, done=done,
-                           buckets=self.scheduler.buckets, extra=extra)
+                           buckets=self.scheduler.buckets,
+                           queue_depth_peak=queue_peak, extra=extra)

@@ -91,6 +91,7 @@ class AsyncServeRuntime:
         self._next_rid = 0
         self.done: list[AsyncRequest] = []
         self.rejected = 0
+        self.queue_depth_peak = 0           # high-watermark of queued images
         self.acct = StepAccounting()
         self._closing = False
         self._started = False
@@ -170,6 +171,8 @@ class AsyncServeRuntime:
             self._inflight[rid] = req
             for i in range(len(arr)):
                 self._queue.append((req, i))
+            self.queue_depth_peak = max(self.queue_depth_peak,
+                                        len(self._queue))
             if not self._started:
                 self._started = True
                 self._thread.start()
@@ -311,6 +314,7 @@ class AsyncServeRuntime:
             rejected = self.rejected
             failed = self.failed_requests
             queued = len(self._queue)
+            queue_peak = self.queue_depth_peak
             acct = dataclasses.replace(self.acct)
         extra = {
             "queued_images": queued,
@@ -323,4 +327,5 @@ class AsyncServeRuntime:
             extra["slo_ms"] = self.scheduler.policy.slo_ms
             extra["slo_attainment"] = round(within / len(done), 4)
         return serve_stats(acct=acct, done=done,
-                           buckets=self.scheduler.buckets, extra=extra)
+                           buckets=self.scheduler.buckets,
+                           queue_depth_peak=queue_peak, extra=extra)

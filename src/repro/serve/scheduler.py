@@ -185,6 +185,14 @@ class ContinuousBatchingScheduler:
             return max(self._step_s.values())
         return 0.0
 
+    def service_snapshot(self) -> dict:
+        """The observed per-bucket step-second EWMAs, ``{bucket: seconds}``
+        — the service-time model a deterministic decision replay
+        (``repro.serve.loadgen.replay_decisions``) can feed back in, so a
+        simulated table uses the service times a live run actually
+        measured. A copy: mutating it never touches the live policy."""
+        return dict(self._step_s)
+
     # -- the decision -------------------------------------------------------
 
     def decide(self, *, backlog: int, oldest_submit_s: float | None,

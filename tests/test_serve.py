@@ -30,10 +30,11 @@ from repro.infer import (ExecutionPlan, MicroBatchEngine, SERVE_STATS_VERSION,
 from repro.infer.compile import plan_chunks
 from repro.infer.engine import (StepAccounting, assemble_batch,
                                 latency_summary, validate_images)
-from repro.serve import (Arrival, AsyncServeRuntime,
+from repro.serve import (Arrival, AsyncServeRuntime, burst_trace, burstiness,
                          ContinuousBatchingScheduler, FleetScheduler,
                          QueueFull, ServeFleet, ServePolicy, image_maker,
-                         poisson_trace, run_open_loop, run_replica_sweep)
+                         poisson_trace, replay_decisions, run_open_loop,
+                         run_replica_sweep, validate_trace)
 
 
 def exact(a, b):
@@ -395,6 +396,130 @@ def test_poisson_trace_deterministic_and_bounded():
         poisson_trace(rps=0, duration_s=1.0, seed=0)
 
 
+def test_validate_trace_fails_loud():
+    # non-monotonic timestamps: a loud ValueError naming the index — the
+    # replay contract depends on arrival order, so never a silent sort
+    with pytest.raises(ValueError, match="arrival 2 .* precedes"):
+        validate_trace([Arrival(0.1, 1), Arrival(0.2, 1), Arrival(0.15, 1)])
+    with pytest.raises(ValueError, match="n_images"):
+        validate_trace([Arrival(0.1, 0)])
+    with pytest.raises(ValueError, match="arrival 0"):
+        validate_trace([Arrival(-0.1, 1)])
+    # any sorted iterable works, including a generator
+    got = validate_trace(Arrival(0.01 * k, 1) for k in range(5))
+    assert len(got) == 5
+
+
+def test_open_loop_rejects_unsorted_trace(small):
+    _, model, _ = small
+    bad = [Arrival(0.2, 1), Arrival(0.1, 1)]
+    with AsyncServeRuntime(model, policy=ServePolicy()) as rt:
+        with pytest.raises(ValueError, match="sorted"):
+            run_open_loop(rt, bad, image_maker(model.input_shape()[1:],
+                                               seed=0), slo_ms=100.0)
+
+
+def test_burst_trace_deterministic_and_bursty():
+    kw = dict(rps_on=200.0, on_s=0.1, off_s=0.3, duration_s=2.0, seed=7)
+    a, b = burst_trace(**kw), burst_trace(**kw)
+    assert a == b and len(a) > 10
+    assert [x.t_s for x in a] == sorted(x.t_s for x in a)
+    # every arrival lands inside an ON phase (OFF draws are discarded)
+    assert all((x.t_s % 0.4) < 0.1 for x in a)
+    # ON/OFF traffic disperses far above Poisson at the same mean rate
+    mean_rps = len(a) / 2.0
+    pois = poisson_trace(rps=mean_rps, duration_s=2.0, seed=7)
+    d_burst = burstiness(a)["dispersion_index"]
+    d_pois = burstiness(pois)["dispersion_index"]
+    assert d_burst > 2.0 > d_pois
+    assert burstiness(a)["peak_to_mean_rate"] > 1.5
+    with pytest.raises(ValueError, match="rps_on"):
+        burst_trace(rps_on=0, on_s=0.1, off_s=0.1, duration_s=1.0, seed=0)
+
+
+def test_burstiness_degenerate_traces():
+    assert burstiness([]) == {"dispersion_index": None,
+                              "peak_to_mean_rate": None}
+    # one window only: no variance to speak of
+    assert burstiness([Arrival(0.01, 1)])["dispersion_index"] is None
+
+
+def test_open_loop_metrics_carry_burstiness(small):
+    _, model, _ = small
+    trace = poisson_trace(rps=100, duration_s=0.5, seed=2)
+    eng = MicroBatchEngine(model)
+    m = run_open_loop(eng, trace, image_maker(model.input_shape()[1:],
+                                              seed=3), slo_ms=10_000.0)
+    assert m["dispersion_index"] is not None
+    assert m["peak_to_mean_rate"] >= 1.0
+
+
+def test_replay_decisions_bursty_shed_and_recovery():
+    """The decision-table replay contract under ON/OFF traffic: the same
+    trace + policy + service model produce the IDENTICAL table, the burst
+    peak sheds (QueueFull) against the admission bound, and the queue
+    recovers — every admitted image leaves the table."""
+    trace = burst_trace(rps_on=400.0, on_s=0.05, off_s=0.2,
+                        duration_s=0.5, seed=11)
+
+    def table():
+        return replay_decisions(trace, sched(max_wait_ms=5.0, depth=6),
+                                service_s={2: 0.02, 8: 0.05})
+
+    t1, t2 = table(), table()
+    assert t1 == t2 and t1
+    rejects = [r for r in t1 if r["event"] == "reject"]
+    dispatches = [r for r in t1 if r["event"] == "dispatch"]
+    assert rejects, "burst peak must shed against depth 6"
+    assert len(rejects) < len(trace), "recovery: not everything sheds"
+    # sheds happen at the bound, never beyond it
+    assert all(r["backlog"] + r["images"] > 6 for r in rejects)
+    # conservation: every admitted image is dispatched exactly once
+    admitted = (sum(a.n_images for a in trace)
+                - sum(r["images"] for r in rejects))
+    assert sum(d["rows"] for d in dispatches) == admitted
+    assert t1[-1]["event"] == "dispatch" and t1[-1]["backlog"] == 0
+
+
+def test_replay_decisions_fleet_uses_both_replicas():
+    trace = burst_trace(rps_on=400.0, on_s=0.05, off_s=0.2,
+                        duration_s=0.5, seed=11)
+
+    def table():
+        s = fleet_sched(n=2, max_wait_ms=5.0, max_queue_images=6)
+        return replay_decisions(trace, s, service_s={2: 0.02, 8: 0.05})
+
+    t1, t2 = table(), table()
+    assert t1 == t2
+    dispatches = [r for r in t1 if r["event"] == "dispatch"]
+    assert {d["replica"] for d in dispatches} == {0, 1}
+    # two modeled workers drain the same bursts with fewer sheds than one
+    one = replay_decisions(trace, sched(max_wait_ms=5.0, depth=6),
+                           service_s={2: 0.02, 8: 0.05})
+    sheds = sum(r["images"] for r in t1 if r["event"] == "reject")
+    sheds_one = sum(r["images"] for r in one if r["event"] == "reject")
+    assert sheds < sheds_one
+
+
+def test_replay_decisions_validates_trace():
+    with pytest.raises(ValueError, match="sorted"):
+        replay_decisions([Arrival(0.2, 1), Arrival(0.1, 1)], sched(),
+                         service_s={2: 0.01, 8: 0.01})
+
+
+def test_service_snapshot_is_a_copy_and_feeds_replay():
+    s = sched()
+    s.observe_step(2, 0.02)
+    s.observe_step(8, 0.05)
+    snap = s.service_snapshot()
+    assert snap == {2: pytest.approx(0.02), 8: pytest.approx(0.05)}
+    snap[2] = 99.0                       # mutating the snapshot is safe
+    assert s.service_estimate(2) == pytest.approx(0.02)
+    # a snapshot is a ready-made service model for the replay
+    table = replay_decisions([Arrival(0.001, 2)], sched(), service_s=snap)
+    assert table and table[-1]["event"] == "dispatch"
+
+
 def test_image_maker_deterministic(small):
     _, model, _ = small
     shape = model.input_shape()[1:]
@@ -484,7 +609,10 @@ def test_stats_schema_shared_and_versioned(small):
               "occupancy", "pad_waste", "padded_rows", "total_rows",
               "buckets", "wall_s", "paper_fps", "realtime",
               "latency_p50_s", "latency_p95_s", "latency_p99_s",
-              "latency_mean_s"}
+              "latency_mean_s", "queue_depth_peak"}
+    # queue_depth_peak joined the shared vocabulary in v2 — pin the
+    # version so a schema change can't ship without bumping it
+    assert SERVE_STATS_VERSION == 2
     eng = MicroBatchEngine(model)
     eng.submit(imgs[:2])
     eng.close()                             # protocol close == run()
@@ -502,6 +630,7 @@ def test_stats_schema_shared_and_versioned(small):
         assert not missing, (name, missing)
         assert st["stats_version"] == SERVE_STATS_VERSION
         assert st["requests"] == 1 and st["images"] == 2
+        assert st["queue_depth_peak"] >= 0
     # async surfaces add queue metrics; the fleet adds its replica table
     for name in ("runtime", "fleet"):
         assert {"queued_images", "requests_rejected",
@@ -771,6 +900,13 @@ def test_fleet_same_request_failing_on_two_replicas_counts_once():
             bad.result(timeout=10)
         ok = fleet.submit(imgs[:2])
         assert ok.result(timeout=10) == [0, 0]
+        # bad's future fails on the FIRST chunk's _fail_batch; the second
+        # replica's worker may still be landing its own failure bookkeeping
+        # (failures += 1, then _work = None, under the lock) — wait for it
+        deadline = time.time() + 5
+        while time.time() < deadline and any(
+                r._work is not None for r in fleet.replicas):
+            time.sleep(0.005)
         stats = fleet.stats()
         health = fleet.health()
     assert stats["requests_failed"] == 1
