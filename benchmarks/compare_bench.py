@@ -17,6 +17,10 @@ smoke, full vs full — timings across configs are not comparable):
   * serving-under-load rows are non-lossy keyed by (rps, replicas) with
     zero dropped-but-accepted requests; paced fleet rows additionally
     gate SLO attainment 1.0 and 1->2 replica goodput scaling >= 1.5;
+  * tracer-overhead rows (``serving_overhead``) are non-lossy; each must
+    show tracer-on goodput within 3% of tracer-off (``overhead_ratio >=
+    0.97`` — the arrival rate is sub-capacity, so the ratio isolates the
+    tracer's hot-path cost) and a lossless ring (``dropped_spans == 0``);
   * event-workload rows (``serving_events``) are non-lossy keyed by
     (trace, replicas), must shed nothing (zero drops AND zero rejections
     — the committed trace is sized under capacity), must hit attainment
@@ -182,6 +186,32 @@ def compare(current: dict, baseline: dict, *, min_ratio: float):
         failures.append(
             f"serving-under-load row (rps, replicas)={key} present in the "
             f"committed baseline but missing from the current record")
+    # tracer-overhead rows: serving with the tracer ON must keep goodput
+    # within 3% of tracer-off, with a lossless ring. The arrival rate is
+    # sub-capacity by design, so both goodputs are arrival-bound and the
+    # ratio is stable on a noisy runner — a miss is tracer hot-path cost,
+    # not compute jitter.
+    OVERHEAD_FLOOR = 0.97
+    for s in current.get("serving_overhead", []):
+        ratio = s.get("overhead_ratio")
+        print(f"serving_overhead rps={s['rps']:g}: goodput off "
+              f"{s['goodput_fps_off']:.1f} fps, on "
+              f"{s['goodput_fps_on']:.1f} fps (ratio {ratio}), "
+              f"{s.get('spans')} spans, dropped {s.get('dropped_spans')}")
+        if ratio is None or ratio < OVERHEAD_FLOOR:
+            failures.append(
+                f"serving_overhead rps={s['rps']:g}: tracer-on/off goodput "
+                f"ratio {ratio} below {OVERHEAD_FLOOR} — tracing costs "
+                f"real throughput")
+        if s.get("dropped_spans", 0):
+            failures.append(
+                f"serving_overhead rps={s['rps']:g}: ring dropped "
+                f"{s['dropped_spans']} spans under bench load — default "
+                f"tracer capacity is undersized")
+    if (baseline.get("serving_overhead")
+            and not current.get("serving_overhead")):
+        failures.append("baseline has serving_overhead rows but the "
+                        "current record lost them")
     # event-workload rows (bursty DVS trace replay — the trace is sized
     # well under capacity, so ANY shed request is a serving bug, and the
     # replay contract is bit-identical labels: same trace twice at one

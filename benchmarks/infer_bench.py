@@ -70,6 +70,7 @@ from repro.kernels import lut_matmul as lut
 from repro.kernels import ops
 from repro.kernels.lut_matmul import sparse_budget
 from repro.events import TRACE_VERSION, load_trace, replay_trace
+from repro.obs import Tracer
 from repro.serve import (AsyncServeRuntime, ServeFleet, ServePolicy,
                          image_maker, poisson_trace, run_open_loop,
                          run_replica_sweep)
@@ -327,6 +328,49 @@ def run_serving_load(model, *, timesteps: int, weight_dtype: str,
     return rows
 
 
+def run_serving_overhead(model, *, timesteps: int, weight_dtype: str,
+                         rps: float, duration_s: float, slo_ms: float,
+                         seed: int) -> list:
+    """Tracer-overhead row: the SAME open-loop Poisson trace served twice
+    through ``AsyncServeRuntime`` — tracer off, then a live ``Tracer``
+    recording every lifecycle span — and the goodput ratio between the
+    runs. The arrival rate is deliberately sub-capacity, so goodput is
+    arrival-bound on both runs and the ratio isolates the tracer's hot-path
+    cost (ring append + counter samples) instead of compute jitter:
+    a tracer that costs real throughput would push the ratio below
+    ``compare_bench.py``'s 0.97 gate. The row also carries the span count
+    and ``dropped_spans`` (must be 0 — a lossy ring under bench load means
+    the default capacity is undersized)."""
+    policy = ServePolicy(max_wait_ms=10.0, slo_ms=slo_ms,
+                         max_queue_images=512)
+    trace = poisson_trace(rps=rps, duration_s=duration_s, seed=seed + 9,
+                          images_per_request=(1, 3))
+
+    def once(tracer):
+        with AsyncServeRuntime(model, policy=policy, tracer=tracer) as rt:
+            return run_open_loop(
+                rt, trace, image_maker(model.input_shape()[1:],
+                                       seed=seed + 10),
+                slo_ms=slo_ms)
+
+    off = once(None)
+    tracer = Tracer()
+    on = once(tracer)
+    return [{
+        "timesteps": timesteps,
+        "weight_dtype": weight_dtype,
+        "rps": rps,
+        "duration_s": duration_s,
+        "requests_offered": off["requests_offered"],
+        "goodput_fps_off": off["goodput_fps"],
+        "goodput_fps_on": on["goodput_fps"],
+        "overhead_ratio": (round(on["goodput_fps"] / off["goodput_fps"], 4)
+                           if off["goodput_fps"] else None),
+        "spans": len(tracer),
+        "dropped_spans": tracer.dropped_spans,
+    }]
+
+
 def run_fleet_load(model, *, timesteps: int, weight_dtype: str,
                    rps: float, duration_s: float, slo_ms: float,
                    replica_counts, pace_fps: float, seed: int) -> list:
@@ -448,6 +492,8 @@ def run(*, batch_size: int = 8, batches: int = 4, repeats: int = 3,
         fleet_rps: float = 40.0,
         fleet_pace_fps: float = 40.0,
         fleet_slo_ms: float = 1000.0,
+        overhead_rps: float = 40.0,
+        overhead_duration_s: float = 1.5,
         events_trace=None,
         events_replicas=(1, 2),
         events_slo_ms: float = 400.0,
@@ -505,6 +551,11 @@ def run(*, batch_size: int = 8, batches: int = 4, repeats: int = 3,
         rps=fleet_rps, duration_s=max(load_duration_s, 2.0),
         slo_ms=fleet_slo_ms, replica_counts=fleet_replicas,
         pace_fps=fleet_pace_fps, seed=seed)
+    serving_overhead = run_serving_overhead(
+        get_model(*load_point)[0],
+        timesteps=load_point[0], weight_dtype=load_point[1],
+        rps=overhead_rps, duration_s=overhead_duration_s,
+        slo_ms=load_slo_ms, seed=seed)
     # the event workload compiles its own DVS-shaped model (2 input
     # channels, sensor-sized), so it does not share the serving cache
     serving_events = run_serving_events(
@@ -538,6 +589,7 @@ def run(*, batch_size: int = 8, batches: int = 4, repeats: int = 3,
         "pallas_sweep": pallas_sweep,
         "serving": serving,
         "serving_load": serving_load,
+        "serving_overhead": serving_overhead,
         "serving_events": serving_events,
         "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
     }
@@ -604,7 +656,7 @@ def main(argv=None):
                   # still two arrival rates: the acceptance contract is
                   # serving-under-load rows at >= 2 rates, smoke included
                   load_rates=(40.0, 120.0), load_duration_s=0.75,
-                  load_slo_ms=150.0,
+                  load_slo_ms=150.0, overhead_duration_s=1.0,
                   # smaller single-layer shape, but the SAME 10/20/30%
                   # rates — the sparse-beats-dense gate holds in smoke too
                   occupancy_shape=(256, 256, 128), occupancy_repeats=3)

@@ -33,6 +33,7 @@ import threading
 import time
 
 from ..core.spike import packed_occupancy
+from ..obs.trace import NULL_TRACER
 from ..serve.scheduler import QueueFull
 from .encoding import (EventStream, empty_stream,
                        encode_events_to_plane_groups, events_to_frame,
@@ -64,7 +65,7 @@ class EventStreamSession:
     def __init__(self, client, *, window_us: int, height: int, width: int,
                  bins: int = 8, t0_us: int = 0, on_window=None,
                  submit_empty: bool = False, capture: bool = False,
-                 clock=time.perf_counter):
+                 clock=time.perf_counter, tracer=None):
         if window_us < 1:
             raise ValueError(f"window_us must be >= 1, got {window_us!r}")
         if bins < 1 or window_us % bins:
@@ -81,6 +82,11 @@ class EventStreamSession:
         self.submit_empty = submit_empty
         self.capture = capture
         self._clock = clock
+        # window spans ("window"/encode, shed, complete — rid is the window
+        # index) land next to the client's request spans when the same
+        # tracer is shared, so a Perfetto view shows ingestion and serving
+        # on one timeline
+        self.tracer = NULL_TRACER if tracer is None else tracer
         self._t_start = None              # wall clock at first feed
         self._open: list[EventStream] = []   # events of the OPEN window
         self._window = 0                  # index of the open window
@@ -145,6 +151,8 @@ class EventStreamSession:
         if not len(events) and not self.submit_empty:
             self.windows_empty += 1
             return
+        tr = self.tracer
+        t_enc0 = tr.clock() if tr.enabled else 0.0
         planes = encode_events_to_plane_groups(
             events, t=self.bins, window_us=self.window_us // self.bins,
             t0_us=w_lo)
@@ -166,12 +174,19 @@ class EventStreamSession:
         # inside submit itself
         row_index = len(self.windows)
         self.windows.append(row)
+        if tr.enabled:
+            # the encode span covers windowing work up to the submit door;
+            # rid is the WINDOW index (the session's request id space)
+            tr.span("window", "encode", t0=t_enc0, t1=tr.clock(), rid=w,
+                    occupancy=row["occupancy"], value=row["events"])
         try:
             handle = self.client.submit(frame[None],
                                         on_image=self._label_cb(row_index))
         except QueueFull:
             self.windows_shed += 1
             row["shed"] = True
+            if tr.enabled:
+                tr.span("window", "shed", rid=w)
         else:
             self._handles.append(handle)
 
@@ -179,6 +194,11 @@ class EventStreamSession:
         def cb(rid, image_index, label):
             with self._lock:
                 self.windows[row_index]["label"] = int(label)
+            tr = self.tracer
+            if tr.enabled:
+                tr.span("window", "complete",
+                        rid=self.windows[row_index]["window"],
+                        value=int(label))
             if self.on_window is not None:
                 self.on_window(self.windows[row_index]["window"], int(label))
         return cb

@@ -11,10 +11,11 @@ from .backends import (FloatBackend, OccupancyRecorder, PackedBackend,
 from .compile import (CompiledModel, ExecutionPlan,
                       calibrate_layer_occupancy, compile, fold_bn,
                       linear_layer_paths, lower, plan_route_tables,
-                      quantize_weights, replicate_model,
-                      strip_lut_annotations)
+                      profile_layer_paths, quantize_weights,
+                      replicate_model, strip_lut_annotations)
 from .engine import (PAPER_FPS, SERVE_STATS_VERSION, MicroBatchEngine,
-                     Request, ServeClient, batch_occupancy, serve_stats)
+                     QueueDepthWatermark, Request, ServeClient,
+                     batch_occupancy, serve_stats)
 from .quant import quantize_folded, quantize_layer
 from .registry import (BackendSpec, backend_spec, list_backends,
                        register_backend, unregister_backend)
@@ -25,9 +26,11 @@ __all__ = [
     "fold_bn", "quantize_weights", "plan_route_tables", "lower",
     "strip_lut_annotations",
     "calibrate_layer_occupancy", "linear_layer_paths",
+    "profile_layer_paths",
     # serve half
     "MicroBatchEngine", "Request", "PAPER_FPS", "batch_occupancy",
     "ServeClient", "serve_stats", "SERVE_STATS_VERSION",
+    "QueueDepthWatermark",
     # backends + registry
     "FloatBackend", "PackedBackend", "OccupancyRecorder", "get_backend",
     "spike_occupancy", "chunk_occupancy", "value_chunk_occupancy",

@@ -25,10 +25,17 @@ on Spikformer V2); drivers compare ``stats()["fps"]`` against that target.
 This module also owns the pieces the engine SHARES with the asynchronous
 continuous-batching runtime (``repro.serve.runtime``): submit-door request
 validation (``validate_images``), batch assembly (``assemble_batch``),
-per-step accounting (``StepAccounting``), and the latency-percentile
-summary (``latency_summary``) — one implementation for the sync and async
+per-step accounting (``StepAccounting``), the latency-percentile summary
+(``latency_summary``), and the queue-depth watermark
+(``QueueDepthWatermark``) — one implementation for the sync and async
 serving paths, which is part of why an identical request trace produces
 bit-identical labels through both.
+
+Observability (``repro.obs``): every ServeClient accepts a ``tracer`` and
+emits the canonical request lifecycle ``admit -> queue -> place ->
+assemble -> step -> complete`` as spans; completed-request latencies feed
+a bounded ``LatencyHistogram`` so ``stats()`` percentiles cost O(buckets)
+memory however long the server lives.
 """
 from __future__ import annotations
 
@@ -38,6 +45,9 @@ import typing
 from collections import deque
 
 import numpy as np
+
+from ..obs.metrics import Gauge, LatencyHistogram
+from ..obs.trace import NULL_TRACER
 
 PAPER_FPS = 30.0   # VESTA's reported real-time Spikformer V2 rate
 
@@ -49,7 +59,13 @@ PAPER_FPS = 30.0   # VESTA's reported real-time Spikformer V2 rate
 #       high-watermark (max images queued at any submit), the backpressure
 #       number bursty event-stream arrivals made necessary: a mean queue
 #       depth hides a burst that grazed the admission bound.
-SERVE_STATS_VERSION = 2
+#   v3: the ``latency_*`` fields are histogram-backed (``repro.obs.metrics.
+#       LatencyHistogram``): same keys, same units, same ``None``-when-empty
+#       contract, but percentiles now come from log-spaced buckets (<= 5%
+#       documented relative error) instead of an unbounded sorted list —
+#       a million-request server holds O(buckets) latency state. Meaning
+#       changed (bounded approximation), so the version bumps.
+SERVE_STATS_VERSION = 3
 
 
 @typing.runtime_checkable
@@ -86,6 +102,7 @@ class Request:
     images: np.ndarray                  # (n, H, W, C) uint8
     labels: list = dataclasses.field(default_factory=list)
     t_submit: float = 0.0
+    t_dequeue: float = 0.0              # first image leaves the queue
     t_done: float = 0.0
     on_image: object = None
 
@@ -232,11 +249,16 @@ def latency_summary(latencies_s, *, prefix: str = "latency_") -> dict:
     """p50/p95/p99/mean over per-request latencies, ``None`` when empty —
     the shared tail-latency report for engine/runtime/loadgen stats.
 
+    Empty-safe by contract: a zero-completed-request window (and any
+    ``None`` entries from still-in-flight requests that leaked into the
+    iterable) reports all-``None`` fields — callers must never need to
+    guard. A single sample reports that sample exactly.
+
     Values are seconds rounded to 6 decimals (microsecond precision):
     serving steps on small models land well under a millisecond, and the
     bench comparisons read these fields — rounding to 4 would collapse
     real sub-millisecond p50/p99 deltas into quantization noise."""
-    lat = np.asarray(list(latencies_s), np.float64)
+    lat = np.asarray([v for v in latencies_s if v is not None], np.float64)
     if not len(lat):
         return {f"{prefix}{k}": None for k in ("p50_s", "p95_s", "p99_s",
                                                "mean_s")}
@@ -250,13 +272,25 @@ def latency_summary(latencies_s, *, prefix: str = "latency_") -> dict:
 
 def serve_stats(*, acct: StepAccounting, done, buckets,
                 queue_depth_peak: int = 0,
+                latency_hist: LatencyHistogram | None = None,
                 extra: dict | None = None) -> dict:
     """The versioned common ``ServeClient.stats()`` schema — ONE builder,
     so the shared keys (``fps``, ``occupancy``, ``pad_waste``,
     ``latency_*``, ``queue_depth_peak``) cannot drift between the sync
     engine, the async runtime, and the fleet. ``extra`` adds
     client-specific keys (rejections, per-replica table) without touching
-    the shared vocabulary."""
+    the shared vocabulary.
+
+    ``latency_hist`` is the v3 percentile source: every client feeds its
+    completed-request latencies into a bounded ``LatencyHistogram`` and
+    passes it here, so the report costs O(buckets) however many requests
+    the server has lived through. Without one (bare callers, old tests)
+    the exact sorted-list path over ``done`` still works — same keys
+    either way."""
+    if latency_hist is not None:
+        latency = latency_hist.summary()
+    else:
+        latency = latency_summary(r.latency_s for r in done)
     out = {
         "stats_version": SERVE_STATS_VERSION,
         "queue_depth_peak": int(queue_depth_peak),
@@ -273,11 +307,32 @@ def serve_stats(*, acct: StepAccounting, done, buckets,
         "pad_waste": round(acct.pad_waste, 4),
         "occupancy": (None if acct.occupancy is None
                       else round(acct.occupancy, 4)),
-        **latency_summary(r.latency_s for r in done),
+        **latency,
     }
     if extra:
         out.update(extra)
     return out
+
+
+class QueueDepthWatermark:
+    """The queue-depth high-watermark every ServeClient reports as
+    ``queue_depth_peak`` — ONE gauge-backed implementation shared by the
+    sync engine, the async runtime, and the fleet, so the bookkeeping
+    (formerly three copy-pasted ``max()`` updates) cannot drift between
+    submit doors. ``observe`` after every enqueue; ``peak`` is the gauge's
+    high-watermark."""
+
+    __slots__ = ("gauge",)
+
+    def __init__(self, gauge: Gauge | None = None):
+        self.gauge = Gauge("queue_depth") if gauge is None else gauge
+
+    def observe(self, depth: int) -> None:
+        self.gauge.set(int(depth))
+
+    @property
+    def peak(self) -> int:
+        return 0 if self.gauge.max is None else int(self.gauge.max)
 
 
 class MicroBatchEngine:
@@ -285,17 +340,30 @@ class MicroBatchEngine:
 
     Implements the ``ServeClient`` protocol (submit / stats / close): the
     closed-loop member of the serving family — ``close()`` is a drain, and
-    a ``result()`` on an incomplete request drains inline."""
+    a ``result()`` on an incomplete request drains inline.
 
-    def __init__(self, model):
+    ``tracer`` (a ``repro.obs.Tracer``) records the request lifecycle
+    spans; ``clock`` is injected (default ``time.perf_counter``) so a test
+    can pin the engine's full span table deterministically — the sync
+    engine has no sleeping worker, so unlike the async runtime its clock
+    is free to be fake."""
+
+    def __init__(self, model, *, tracer=None, clock=time.perf_counter):
         self.model = model
         self.buckets = tuple(model.buckets)
+        self.tracer = NULL_TRACER if tracer is None else tracer
+        self._clock = clock
         self.queue: deque = deque()         # (request, image index)
         self.done: list[Request] = []
         self._pending: dict[int, int] = {}  # rid -> images left
         self._next_rid = 0
-        self.queue_depth_peak = 0           # high-watermark of queued images
+        self._queue_depth = QueueDepthWatermark()
+        self.latency_hist = LatencyHistogram()
         self.acct = StepAccounting()
+
+    @property
+    def queue_depth_peak(self) -> int:
+        return self._queue_depth.peak
 
     # accounting attribute surface predates StepAccounting; keep it readable
     @property
@@ -333,6 +401,7 @@ class MicroBatchEngine:
         conflicting ``rid=`` would complete the request under an id the
         caller never sees again. ``on_image(rid, index, label)`` streams
         per-image completions, same contract as the async runtime."""
+        t_enter = self._clock()
         if isinstance(images, Request):
             req = images
             if rid is not None and rid != req.rid:
@@ -353,20 +422,31 @@ class MicroBatchEngine:
             # (completion is counted per rid) — fail at the door instead
             raise ValueError(f"request id {req.rid} is already in flight")
         self._next_rid = max(self._next_rid, req.rid + 1)
-        req.t_submit = time.perf_counter()
+        req.t_submit = self._clock()
         req.labels = [None] * len(req.images)
         # result() on a not-yet-run request drains this engine inline —
         # the sync spelling of the async future (see Request.result)
         req._drain = self.run
+        tr = self.tracer
         if not len(req.images):
             # nothing to queue: complete immediately so run()/stats() see it
             req.t_done = req.t_submit
             self.done.append(req)
+            self.latency_hist.observe(0.0)
+            if tr.enabled:
+                tr.span("request", "admit", t0=t_enter, t1=req.t_submit,
+                        rid=req.rid, value=0)
+                tr.span("request", "complete", t0=req.t_submit,
+                        t1=req.t_done, rid=req.rid)
             return req
         self._pending[req.rid] = len(req.images)
         for i in range(len(req.images)):
             self.queue.append((req, i))
-        self.queue_depth_peak = max(self.queue_depth_peak, len(self.queue))
+        self._queue_depth.observe(len(self.queue))
+        if tr.enabled:
+            tr.span("request", "admit", t0=t_enter, t1=req.t_submit,
+                    rid=req.rid, value=len(req.images))
+            tr.counter("queue_depth", len(self.queue), t=req.t_submit)
         return req
 
     def pick_bucket(self, backlog: int) -> int:
@@ -384,17 +464,35 @@ class MicroBatchEngine:
         """Classify one fused batch drawn across requests; returns #images."""
         if not self.queue:
             return 0
-        t_start = time.perf_counter()
+        tr = self.tracer
+        t_start = self._clock()
         bucket = self.pick_bucket(len(self.queue))
+        t_place = self._clock()
+        if tr.enabled:
+            tr.span("batch", "place", t0=t_start, t1=t_place, bucket=bucket)
         work = [self.queue.popleft()
                 for _ in range(min(bucket, len(self.queue)))]
+        t_pop = self._clock()
+        if tr.enabled:
+            for req, _ in work:
+                if not req.t_dequeue:     # first image leaving the queue
+                    req.t_dequeue = t_pop
+                    tr.span("request", "queue", t0=req.t_submit, t1=t_pop,
+                            rid=req.rid)
         batch, _ = assemble_batch([req.images[i] for req, i in work], bucket)
         occ = batch_occupancy(batch[:len(work)])  # real rows only
-        t0 = time.perf_counter()
+        t0 = self._clock()
+        if tr.enabled:
+            tr.span("batch", "assemble", t0=t_pop, t1=t0, bucket=bucket,
+                    occupancy=occ, value=len(work))
         logits = np.asarray(self.model.step(batch))
-        busy_s = time.perf_counter() - t0
+        busy_s = self._clock() - t0
+        if tr.enabled:
+            tr.span("batch", "step", t0=t0, t1=t0 + busy_s, bucket=bucket,
+                    occupancy=occ, value=len(work))
+            tr.counter("occupancy", occ, t=t0)
         labels = logits[:len(work)].argmax(axis=-1)
-        now = time.perf_counter()
+        now = self._clock()
         for (req, i), lab in zip(work, labels):
             req.labels[i] = int(lab)
             self._pending[req.rid] -= 1
@@ -402,8 +500,12 @@ class MicroBatchEngine:
                 del self._pending[req.rid]     # rid leaves "in flight"
                 req.t_done = now
                 self.done.append(req)
+                self.latency_hist.observe(now - req.t_submit)
+                if tr.enabled:
+                    tr.span("request", "complete", t0=req.t_submit, t1=now,
+                            rid=req.rid)
         self.acct.record_step(rows=len(work), bucket=bucket, busy_s=busy_s,
-                              wall_s=time.perf_counter() - t_start,
+                              wall_s=self._clock() - t_start,
                               occupancy=occ)
         for (req, i), lab in zip(work, labels):
             if req.on_image is not None:
@@ -438,4 +540,5 @@ class MicroBatchEngine:
         ServeClient schema)."""
         return serve_stats(acct=self.acct, done=self.done,
                            buckets=self.buckets,
-                           queue_depth_peak=self.queue_depth_peak)
+                           queue_depth_peak=self.queue_depth_peak,
+                           latency_hist=self.latency_hist)

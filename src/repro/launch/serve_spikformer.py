@@ -32,12 +32,33 @@ import numpy as np
 from ..core.spikformer import SpikformerConfig, init as spik_init
 from ..infer import ExecutionPlan, MicroBatchEngine, PAPER_FPS, compile
 from ..infer.engine import Request
+from ..obs import Tracer, write_chrome_trace, write_spans_jsonl
 from ..serve import (AsyncServeRuntime, ServeFleet, ServePolicy,
                      image_maker, poisson_trace, run_open_loop)
 
 # Pre-split names, kept importable: ImageRequest is the engine Request;
 # SpikformerEngine is a construct-from-params convenience over the split.
 ImageRequest = Request
+
+
+def make_tracer(args):
+    """One ``Tracer`` when ``--trace-out`` asks for a trace, else None —
+    clients built with ``tracer=None`` run the NULL_TRACER fast path."""
+    return Tracer() if args.trace_out else None
+
+
+def dump_trace(tracer, path, *, meta=None):
+    """Write the span JSONL plus the Perfetto sibling (``.perfetto.json``
+    next to the JSONL); prints where they landed and how lossy the ring
+    was. Returns the summary row."""
+    n = write_spans_jsonl(path, tracer, meta=meta)
+    perfetto = (path[:-len(".jsonl")] + ".perfetto.json"
+                if path.endswith(".jsonl") else path + ".perfetto.json")
+    write_chrome_trace(perfetto, tracer)
+    row = {"trace_out": path, "perfetto": perfetto, "spans": n,
+           "dropped_spans": tracer.dropped_spans}
+    print(json.dumps(row))
+    return row
 
 
 class SpikformerEngine(MicroBatchEngine):
@@ -105,6 +126,10 @@ def main(argv=None):
                     help="events: path to a recorded JSONL event trace "
                          "(repro.events.trace format); the model is "
                          "compiled to the trace header's sensor shape")
+    ap.add_argument("--trace-out", default=None,
+                    help="write the request-lifecycle trace here as span "
+                         "JSONL (a Perfetto-loadable .perfetto.json lands "
+                         "next to it); works in every mode")
     ap.add_argument("--smoke", action="store_true",
                     help="CI smoke: few requests, assert completion/shapes")
     args = ap.parse_args(argv)
@@ -141,7 +166,8 @@ def main(argv=None):
     if args.use_async:
         return main_async(model, args, compile_s)
 
-    eng = MicroBatchEngine(model)
+    tracer = make_tracer(args)
+    eng = MicroBatchEngine(model, tracer=tracer)
 
     rng = np.random.default_rng(args.seed + 1)
     for i in range(args.requests):
@@ -152,6 +178,8 @@ def main(argv=None):
 
     done = eng.run()
     stats = eng.stats()
+    if tracer is not None:
+        dump_trace(tracer, args.trace_out, meta={"mode": "sync"})
     summary = {
         "backend": model.backend.name,
         "weight_dtype": model.weight_dtype,
@@ -182,16 +210,21 @@ def main_async(model, args, compile_s: float):
     trace = poisson_trace(rps=args.rps, duration_s=args.duration,
                           seed=args.seed + 1,
                           images_per_request=(1, args.images_per_request))
+    tracer = make_tracer(args)
     if args.replicas > 1:
         client = ServeFleet(model, replicas=args.replicas, policy=policy,
-                            pace_fps=args.pace_fps)
+                            pace_fps=args.pace_fps, tracer=tracer)
     else:
-        client = AsyncServeRuntime(model, policy=policy)
+        client = AsyncServeRuntime(model, policy=policy, tracer=tracer)
     with client:
         metrics = run_open_loop(
             client, trace, image_maker(model.input_shape()[1:],
                                        seed=args.seed + 2),
             slo_ms=args.slo_ms)
+    if tracer is not None:
+        dump_trace(tracer, args.trace_out,
+                   meta={"mode": "fleet" if args.replicas > 1 else "async",
+                         "replicas": args.replicas})
     summary = {
         "backend": model.backend.name,
         "weight_dtype": model.weight_dtype,
@@ -293,18 +326,22 @@ def main_events(args):
     policy = ServePolicy(max_wait_ms=args.max_wait_ms, slo_ms=args.slo_ms,
                          max_queue_images=args.queue_depth)
 
-    def run_once():
+    def run_once(tracer=None):
         if args.replicas > 1:
             client = ServeFleet(model, replicas=args.replicas, policy=policy,
-                                pace_fps=args.pace_fps)
+                                pace_fps=args.pace_fps, tracer=tracer)
         else:
-            client = AsyncServeRuntime(model, policy=policy)
+            client = AsyncServeRuntime(model, policy=policy, tracer=tracer)
         with client:
             metrics = replay_trace(trace, client, slo_ms=args.slo_ms)
         metrics["runtime"] = client.stats()
         return metrics
 
-    metrics = run_once()
+    tracer = make_tracer(args)
+    metrics = run_once(tracer)
+    if tracer is not None:
+        dump_trace(tracer, args.trace_out,
+                   meta={"mode": "events", "replicas": args.replicas})
     summary = {
         "backend": model.backend.name,
         "weight_dtype": model.weight_dtype,

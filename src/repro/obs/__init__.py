@@ -1,0 +1,29 @@
+"""``repro.obs`` — tracing + metrics for the serving stack.
+
+One tracer surface shared by every ``ServeClient`` (sync engine, async
+runtime, fleet) and the event-stream session; bounded metrics (log-bucket
+latency histograms, gauges, counters) backing the shared ``stats()``
+schema; Chrome-trace/Perfetto and JSONL export. See ``obs/README.md`` for
+the span taxonomy and the ring-buffer contract.
+"""
+from .export import (SPANS_SCHEMA_VERSION, load_spans_jsonl, to_chrome_trace,
+                     write_chrome_trace, write_spans_jsonl)
+from .metrics import Counter, Gauge, LatencyHistogram, MetricsRegistry
+from .trace import (LIFECYCLE, NULL_TRACER, NullTracer, Span, Tracer)
+
+__all__ = [
+    "LIFECYCLE",
+    "NULL_TRACER",
+    "NullTracer",
+    "Span",
+    "Tracer",
+    "Counter",
+    "Gauge",
+    "LatencyHistogram",
+    "MetricsRegistry",
+    "SPANS_SCHEMA_VERSION",
+    "load_spans_jsonl",
+    "to_chrome_trace",
+    "write_chrome_trace",
+    "write_spans_jsonl",
+]

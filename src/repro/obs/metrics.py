@@ -1,0 +1,215 @@
+"""Bounded serving metrics: counters, gauges, and log-bucketed latency
+histograms.
+
+The original percentile path (``infer.engine.latency_summary``) holds
+every completed request's latency and sorts at report time — O(requests)
+memory, which a long-lived server cannot afford at "millions of users"
+scale. ``LatencyHistogram`` replaces it with **log-spaced buckets**: each
+observation lands in the bucket whose edges bracket it, so a
+million-request run holds O(buckets) floats and a percentile query walks
+the cumulative counts.
+
+The accuracy contract, documented and tested: bucket edges grow by
+``growth`` (default 1.05), so a percentile's representative value is
+within **one bucket width — at most ``growth - 1`` (5%) relative
+error** — of the exact order statistic, and always clamped into the
+observed ``[min, max]`` (a single sample, or an all-equal population,
+reports exactly). The mean is exact (sum/count), and zero/sub-range
+observations land in a dedicated underflow bucket represented by the
+observed minimum.
+
+``MetricsRegistry`` is the flat namespace the serving stack publishes
+into (scheduler EWMAs as gauges, queue-depth watermarks, drop counters);
+``snapshot()`` renders it as one plain dict for stats/debug endpoints.
+"""
+from __future__ import annotations
+
+import math
+import threading
+
+
+class Counter:
+    """A monotonically increasing count (requests, drops, spans)."""
+
+    def __init__(self, name: str):
+        self.name = name
+        self.value = 0
+
+    def inc(self, n: int = 1) -> None:
+        self.value += n
+
+
+class Gauge:
+    """A last-value-wins reading that also tracks its high-watermark —
+    the ``max`` is what ``queue_depth_peak`` reports, so a burst that
+    grazed the bound survives every later quiet sample."""
+
+    def __init__(self, name: str):
+        self.name = name
+        self.value: float | None = None
+        self.max: float | None = None
+
+    def set(self, value: float) -> None:
+        self.value = value
+        if self.max is None or value > self.max:
+            self.max = value
+
+
+class LatencyHistogram:
+    """Log-bucketed latency distribution with bounded percentile error.
+
+        h = LatencyHistogram()           # 1us..100s span, 5% buckets
+        h.observe(0.012)
+        h.percentile(99)                 # within growth-1 of exact
+        h.summary()                      # the latency_* stats fields
+
+    Memory is fixed at construction: ``len(counts)`` buckets regardless
+    of how many observations arrive. Thread-safe (one lock per observe —
+    the serving workers complete requests concurrently).
+    """
+
+    def __init__(self, *, lo: float = 1e-6, hi: float = 100.0,
+                 growth: float = 1.05):
+        if not 0 < lo < hi:
+            raise ValueError(f"need 0 < lo < hi, got lo={lo!r} hi={hi!r}")
+        if growth <= 1.0:
+            raise ValueError(f"growth must be > 1, got {growth!r}")
+        self.lo, self.hi, self.growth = float(lo), float(hi), float(growth)
+        self._log_lo = math.log(lo)
+        self._log_growth = math.log(growth)
+        n = int(math.ceil((math.log(hi) - self._log_lo) / self._log_growth))
+        # +2: an underflow bucket (index 0, readings < lo — including the
+        # exact 0.0 an empty request reports) and an overflow bucket
+        self.counts = [0] * (n + 2)
+        self.count = 0
+        self.sum = 0.0
+        self.min: float | None = None
+        self.max: float | None = None
+        self._lock = threading.Lock()
+
+    @property
+    def error_bound(self) -> float:
+        """Documented worst-case relative percentile error: one bucket
+        width."""
+        return self.growth - 1.0
+
+    def _index(self, seconds: float) -> int:
+        if seconds < self.lo:
+            return 0
+        if seconds >= self.hi:
+            return len(self.counts) - 1
+        return 1 + int((math.log(seconds) - self._log_lo)
+                       / self._log_growth)
+
+    def observe(self, seconds: float) -> None:
+        seconds = float(seconds)
+        if seconds < 0:
+            raise ValueError(f"latency must be >= 0, got {seconds!r}")
+        i = min(self._index(seconds), len(self.counts) - 1)
+        with self._lock:
+            self.counts[i] += 1
+            self.count += 1
+            self.sum += seconds
+            if self.min is None or seconds < self.min:
+                self.min = seconds
+            if self.max is None or seconds > self.max:
+                self.max = seconds
+
+    def _representative(self, i: int) -> float:
+        """A bucket's stand-in value: the geometric midpoint of its edges
+        (underflow/overflow use their finite edge), clamped to the
+        observed range — which makes single-sample and all-equal
+        populations exact."""
+        if i == 0:
+            v = self.lo
+        elif i == len(self.counts) - 1:
+            v = self.hi
+        else:
+            e0 = self.lo * self.growth ** (i - 1)
+            v = e0 * math.sqrt(self.growth)
+        return max(self.min, min(self.max, v))
+
+    def percentile(self, q: float) -> float | None:
+        """The q-th percentile (0..100), ``None`` when empty. Nearest-rank
+        over the cumulative bucket counts; the returned value is the
+        holding bucket's representative, so the error is bounded by one
+        bucket width (``error_bound``) relative."""
+        with self._lock:
+            if not self.count:
+                return None
+            rank = max(1, math.ceil(q / 100.0 * self.count))
+            seen = 0
+            for i, c in enumerate(self.counts):
+                seen += c
+                if seen >= rank:
+                    return self._representative(i)
+            return self._representative(len(self.counts) - 1)
+
+    @property
+    def mean(self) -> float | None:
+        return self.sum / self.count if self.count else None
+
+    def summary(self, *, prefix: str = "latency_") -> dict:
+        """The shared stats vocabulary (``latency_p50_s``/``p95``/``p99``/
+        ``mean_s``), all ``None`` when no request ever completed — the
+        empty window reports absence, it does not crash the caller."""
+        if not self.count:
+            return {f"{prefix}{k}": None for k in ("p50_s", "p95_s",
+                                                   "p99_s", "mean_s")}
+        return {
+            f"{prefix}p50_s": round(self.percentile(50), 6),
+            f"{prefix}p95_s": round(self.percentile(95), 6),
+            f"{prefix}p99_s": round(self.percentile(99), 6),
+            f"{prefix}mean_s": round(self.mean, 6),
+        }
+
+
+class MetricsRegistry:
+    """A flat, typed metric namespace: ``counter``/``gauge``/``histogram``
+    get-or-create by name, and asking for an existing name as a different
+    type fails loudly (two subsystems silently sharing "queue_depth" as
+    different shapes is a reporting bug, not a convenience)."""
+
+    def __init__(self):
+        self._metrics: dict[str, object] = {}
+        self._lock = threading.Lock()
+
+    def _get(self, name: str, cls, factory):
+        with self._lock:
+            m = self._metrics.get(name)
+            if m is None:
+                m = self._metrics[name] = factory()
+            elif not isinstance(m, cls):
+                raise TypeError(
+                    f"metric {name!r} is a {type(m).__name__}, not a "
+                    f"{cls.__name__}")
+            return m
+
+    def counter(self, name: str) -> Counter:
+        return self._get(name, Counter, lambda: Counter(name))
+
+    def gauge(self, name: str) -> Gauge:
+        return self._get(name, Gauge, lambda: Gauge(name))
+
+    def histogram(self, name: str, **kw) -> LatencyHistogram:
+        return self._get(name, LatencyHistogram,
+                         lambda: LatencyHistogram(**kw))
+
+    def names(self) -> list[str]:
+        with self._lock:
+            return sorted(self._metrics)
+
+    def snapshot(self) -> dict:
+        """Every metric as plain data: counters to ints, gauges to
+        ``{value, max}``, histograms to their summary dict."""
+        with self._lock:
+            items = list(self._metrics.items())
+        out = {}
+        for name, m in items:
+            if isinstance(m, Counter):
+                out[name] = m.value
+            elif isinstance(m, Gauge):
+                out[name] = {"value": m.value, "max": m.max}
+            else:
+                out[name] = {"count": m.count, **m.summary()}
+        return out

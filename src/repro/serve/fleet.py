@@ -57,8 +57,11 @@ from collections import deque
 import numpy as np
 
 from ..infer.compile import replicate_model
-from ..infer.engine import (Request, StepAccounting, assemble_batch,
-                            batch_occupancy, serve_stats, validate_images)
+from ..infer.engine import (QueueDepthWatermark, Request, StepAccounting,
+                            assemble_batch, batch_occupancy, serve_stats,
+                            validate_images)
+from ..obs.metrics import LatencyHistogram
+from ..obs.trace import NULL_TRACER
 from ..sharding.rules import replica_devices
 from .runtime import AsyncRequest
 from .scheduler import FleetScheduler, QueueFull, ServePolicy
@@ -114,7 +117,8 @@ class ServeFleet:
     def __init__(self, model, *, replicas: int = 1,
                  policy: ServePolicy | None = None,
                  scheduler: FleetScheduler | None = None,
-                 devices=None, pace_fps: float | None = None):
+                 devices=None, pace_fps: float | None = None,
+                 tracer=None):
         if replicas < 1:
             raise ValueError(f"replicas must be >= 1, got {replicas!r}")
         if scheduler is not None and policy is not None:
@@ -147,6 +151,7 @@ class ServeFleet:
                      else replicate_model(model, device=dev), device=dev)
             for i, dev in enumerate(devices)]
         self._clock = time.perf_counter
+        self.tracer = NULL_TRACER if tracer is None else tracer
         self._cv = threading.Condition()
         self._queue: deque = deque()        # (request, image index)
         self._pending: dict[int, int] = {}  # rid -> images left
@@ -154,7 +159,8 @@ class ServeFleet:
         self._next_rid = 0
         self.done: list[AsyncRequest] = []
         self.rejected = 0
-        self.queue_depth_peak = 0           # high-watermark of queued images
+        self._queue_depth = QueueDepthWatermark()
+        self.latency_hist = LatencyHistogram()
         self.acct = StepAccounting()
         self.failed_requests = 0
         self.swaps = 0
@@ -164,6 +170,10 @@ class ServeFleet:
         self._error: BaseException | None = None
         self._dispatcher = threading.Thread(
             target=self._dispatch, daemon=True, name="repro-fleet-dispatch")
+
+    @property
+    def queue_depth_peak(self) -> int:
+        return self._queue_depth.peak
 
     # -- lifecycle ----------------------------------------------------------
 
@@ -225,7 +235,9 @@ class ServeFleet:
         whose future resolves to the label list. Same door as
         ``AsyncServeRuntime.submit``: validation here, ``QueueFull`` on
         admission rejection, rid conflicts fail loudly."""
+        t_enter = self._clock()
         arr = validate_images(images, self.model.input_shape()[1:])
+        tr = self.tracer
         with self._cv:
             if self._error is not None:
                 raise RuntimeError(f"fleet died: {self._error!r}")
@@ -248,14 +260,23 @@ class ServeFleet:
             if not len(arr):
                 req.t_done = req.t_submit
                 self.done.append(req)
+                self.latency_hist.observe(0.0)
+                if tr.enabled:
+                    tr.span("request", "admit", t0=t_enter, t1=req.t_submit,
+                            rid=req.rid, value=0)
+                    tr.span("request", "complete", t0=req.t_submit,
+                            t1=req.t_done, rid=req.rid)
                 req.future.set_result([])
                 return req
             self._pending[rid] = len(arr)
             self._inflight[rid] = req
             for i in range(len(arr)):
                 self._queue.append((req, i))
-            self.queue_depth_peak = max(self.queue_depth_peak,
-                                        len(self._queue))
+            self._queue_depth.observe(len(self._queue))
+            if tr.enabled:
+                tr.span("request", "admit", t0=t_enter, t1=req.t_submit,
+                        rid=req.rid, value=len(arr))
+                tr.counter("queue_depth", len(self._queue), t=req.t_submit)
             must_start = not self._started
             self._cv.notify_all()
         if must_start:
@@ -301,6 +322,18 @@ class ServeFleet:
                         for _ in range(min(d.rows, len(self._queue)))]
                 rep = self.replicas[d.replica]
                 rep._work = (d, work)
+                tr = self.tracer
+                if tr.enabled:
+                    t_pop = self._clock()
+                    tr.span("batch", "place", t0=now, t1=t_pop,
+                            bucket=d.bucket, replica=d.replica,
+                            value=len(work))
+                    tr.counter("queue_depth", len(self._queue), t=t_pop)
+                    for r, _ in work:
+                        if not r.t_dequeue:    # first image leaves queue
+                            r.t_dequeue = t_pop
+                            tr.span("request", "queue", t0=r.t_submit,
+                                    t1=t_pop, rid=r.rid, replica=d.replica)
                 self._cv.notify_all()
 
     # -- replica workers ----------------------------------------------------
@@ -326,12 +359,17 @@ class ServeFleet:
                 d, work = rep._work
                 model = rep.model
             # model step OUTSIDE the lock: other replicas keep running
+            tr = self.tracer
             try:
                 t_start = self._clock()
                 batch, _ = assemble_batch(
                     [req.images[i] for req, i in work], d.bucket)
                 occ = batch_occupancy(batch[:len(work)])  # real rows only
                 t0 = self._clock()
+                if tr.enabled:
+                    tr.span("batch", "assemble", t0=t_start, t1=t0,
+                            bucket=d.bucket, replica=rep.idx,
+                            occupancy=occ, value=len(work))
                 logits = np.asarray(model.step(batch))
                 if pace is not None:
                     # emulated fixed-rate core: the slot is held for the
@@ -340,6 +378,11 @@ class ServeFleet:
                     if gap > 0:
                         time.sleep(gap)
                 busy_s = self._clock() - t0
+                if tr.enabled:
+                    tr.span("batch", "step", t0=t0, t1=t0 + busy_s,
+                            bucket=d.bucket, replica=rep.idx,
+                            occupancy=occ, value=len(work))
+                    tr.counter("occupancy", occ, t=t0, replica=rep.idx)
             except Exception as exc:
                 self._fail_batch(rep, work, exc)
                 continue
@@ -365,6 +408,10 @@ class ServeFleet:
                                               np.uint8)
                         self.done.append(req)
                         completed.append(req)
+                        self.latency_hist.observe(now - req.t_submit)
+                        if tr.enabled:
+                            tr.span("request", "complete", t0=req.t_submit,
+                                    t1=now, rid=req.rid, replica=rep.idx)
                 wall_s = self._clock() - t_start
                 self.acct.record_step(rows=len(work), bucket=d.bucket,
                                       busy_s=busy_s, wall_s=wall_s,
@@ -603,4 +650,5 @@ class ServeFleet:
                 extra["slo_attainment"] = round(within / len(done), 4)
         return serve_stats(acct=acct, done=done,
                            buckets=self.scheduler.buckets,
-                           queue_depth_peak=queue_peak, extra=extra)
+                           queue_depth_peak=queue_peak,
+                           latency_hist=self.latency_hist, extra=extra)

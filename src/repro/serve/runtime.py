@@ -39,8 +39,11 @@ from concurrent.futures import Future
 
 import numpy as np
 
-from ..infer.engine import (Request, StepAccounting, assemble_batch,
-                            batch_occupancy, serve_stats, validate_images)
+from ..infer.engine import (QueueDepthWatermark, Request, StepAccounting,
+                            assemble_batch, batch_occupancy, serve_stats,
+                            validate_images)
+from ..obs.metrics import LatencyHistogram
+from ..obs.trace import NULL_TRACER
 from .scheduler import ContinuousBatchingScheduler, QueueFull, ServePolicy
 
 
@@ -74,7 +77,8 @@ class AsyncServeRuntime:
     """
 
     def __init__(self, model, *, policy: ServePolicy | None = None,
-                 scheduler: ContinuousBatchingScheduler | None = None):
+                 scheduler: ContinuousBatchingScheduler | None = None,
+                 tracer=None):
         if scheduler is not None and policy is not None:
             raise ValueError("pass either policy or a prebuilt scheduler")
         self.model = model
@@ -82,8 +86,11 @@ class AsyncServeRuntime:
                           ContinuousBatchingScheduler(model.buckets, policy))
         # the runtime is wall-clock by design: Condition.wait sleeps real
         # time, so deadlines must be computed on the same clock. Injected
-        # clocks (determinism) belong in the pure scheduler, not here.
+        # clocks (determinism) belong in the pure scheduler, not here —
+        # span determinism tests therefore pin the per-request span NAME
+        # chain, which is timestamp-free.
         self._clock = time.perf_counter
+        self.tracer = NULL_TRACER if tracer is None else tracer
         self._cv = threading.Condition()
         self._queue: deque = deque()        # (request, image index)
         self._pending: dict[int, int] = {}  # rid -> images left
@@ -91,7 +98,8 @@ class AsyncServeRuntime:
         self._next_rid = 0
         self.done: list[AsyncRequest] = []
         self.rejected = 0
-        self.queue_depth_peak = 0           # high-watermark of queued images
+        self._queue_depth = QueueDepthWatermark()
+        self.latency_hist = LatencyHistogram()
         self.acct = StepAccounting()
         self._closing = False
         self._started = False
@@ -99,6 +107,10 @@ class AsyncServeRuntime:
         self.failed_requests = 0
         self._thread = threading.Thread(target=self._worker, daemon=True,
                                         name="repro-serve-worker")
+
+    @property
+    def queue_depth_peak(self) -> int:
+        return self._queue_depth.peak
 
     # -- lifecycle ----------------------------------------------------------
 
@@ -140,7 +152,9 @@ class AsyncServeRuntime:
         admission control rejects the request (bounded queue — the caller
         sheds or retries; nothing is silently buffered).
         """
+        t_enter = self._clock()
         arr = validate_images(images, self.model.input_shape()[1:])
+        tr = self.tracer
         with self._cv:
             if self._worker_error is not None:
                 raise RuntimeError(
@@ -165,14 +179,23 @@ class AsyncServeRuntime:
                 # empty request: complete immediately, still counted
                 req.t_done = req.t_submit
                 self.done.append(req)
+                self.latency_hist.observe(0.0)
+                if tr.enabled:
+                    tr.span("request", "admit", t0=t_enter, t1=req.t_submit,
+                            rid=req.rid, value=0)
+                    tr.span("request", "complete", t0=req.t_submit,
+                            t1=req.t_done, rid=req.rid)
                 req.future.set_result([])
                 return req
             self._pending[rid] = len(arr)
             self._inflight[rid] = req
             for i in range(len(arr)):
                 self._queue.append((req, i))
-            self.queue_depth_peak = max(self.queue_depth_peak,
-                                        len(self._queue))
+            self._queue_depth.observe(len(self._queue))
+            if tr.enabled:
+                tr.span("request", "admit", t0=t_enter, t1=req.t_submit,
+                        rid=req.rid, value=len(arr))
+                tr.counter("queue_depth", len(self._queue), t=req.t_submit)
             if not self._started:
                 self._started = True
                 self._thread.start()
@@ -254,6 +277,17 @@ class AsyncServeRuntime:
                     self._cv.wait(d.wait_s if d.action == "wait" else None)
                 work = [self._queue.popleft()
                         for _ in range(min(d.rows, len(self._queue)))]
+                tr = self.tracer
+                if tr.enabled:
+                    t_pop = self._clock()
+                    tr.span("batch", "place", t0=now, t1=t_pop,
+                            bucket=d.bucket, value=len(work))
+                    tr.counter("queue_depth", len(self._queue), t=t_pop)
+                    for req, _ in work:
+                        if not req.t_dequeue:   # first image leaves queue
+                            req.t_dequeue = t_pop
+                            tr.span("request", "queue", t0=req.t_submit,
+                                    t1=t_pop, rid=req.rid)
             # model step OUTSIDE the lock: submits stay concurrent
             try:
                 t_start = self._clock()
@@ -261,8 +295,15 @@ class AsyncServeRuntime:
                                           d.bucket)
                 occ = batch_occupancy(batch[:len(work)])  # real rows only
                 t0 = self._clock()
+                if tr.enabled:
+                    tr.span("batch", "assemble", t0=t_start, t1=t0,
+                            bucket=d.bucket, occupancy=occ, value=len(work))
                 logits = np.asarray(self.model.step(batch))
                 busy_s = self._clock() - t0
+                if tr.enabled:
+                    tr.span("batch", "step", t0=t0, t1=t0 + busy_s,
+                            bucket=d.bucket, occupancy=occ, value=len(work))
+                    tr.counter("occupancy", occ, t=t0)
             except Exception as exc:
                 self._fail_batch(work, exc)
                 continue
@@ -285,6 +326,10 @@ class AsyncServeRuntime:
                                               np.uint8)
                         self.done.append(req)
                         completed.append(req)
+                        self.latency_hist.observe(now - req.t_submit)
+                        if tr.enabled:
+                            tr.span("request", "complete", t0=req.t_submit,
+                                    t1=now, rid=req.rid)
                 self.acct.record_step(rows=len(work), bucket=d.bucket,
                                       busy_s=busy_s,
                                       wall_s=self._clock() - t_start,
@@ -328,4 +373,5 @@ class AsyncServeRuntime:
             extra["slo_attainment"] = round(within / len(done), 4)
         return serve_stats(acct=acct, done=done,
                            buckets=self.scheduler.buckets,
-                           queue_depth_peak=queue_peak, extra=extra)
+                           queue_depth_peak=queue_peak,
+                           latency_hist=self.latency_hist, extra=extra)

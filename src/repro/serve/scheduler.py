@@ -193,6 +193,38 @@ class ContinuousBatchingScheduler:
         measured. A copy: mutating it never touches the live policy."""
         return dict(self._step_s)
 
+    def debug_state(self) -> dict:
+        """EVERY table behind the wait-vs-dispatch decision, as plain data
+        — the inspectability hook for "why did the window close here?".
+        Keys mirror the internal tables: ``step_s`` is ``{bucket: EWMA
+        seconds}``, ``class_step_s`` is ``{"<bucket>/<sparse|dense>":
+        EWMA seconds}`` (string keys: this dict feeds JSON debug
+        endpoints and gauge names), ``occupancy_ewma`` the running
+        occupancy estimate (``None`` before any measured step). A copy —
+        mutating it never touches the live policy."""
+        return {
+            "buckets": list(self.buckets),
+            "step_s": dict(self._step_s),
+            "class_step_s": {f"{b}/{cls}": v for (b, cls), v
+                             in self._class_step_s.items()},
+            "occupancy_ewma": self._occ_ewma,
+        }
+
+    def publish(self, registry, *, prefix: str = "scheduler/") -> None:
+        """Publish ``debug_state()`` into a ``repro.obs.MetricsRegistry``
+        as gauges (``scheduler/step_s/<bucket>``, ``scheduler/
+        class_step_s/<bucket>/<class>``, ...). Generic over the snapshot
+        shape, so ``FleetScheduler``'s extra replica tables publish
+        through this same method."""
+        for section, table in self.debug_state().items():
+            if section == "buckets":
+                continue
+            if isinstance(table, dict):
+                for key, v in table.items():
+                    registry.gauge(f"{prefix}{section}/{key}").set(float(v))
+            elif table is not None:
+                registry.gauge(f"{prefix}{section}").set(float(table))
+
     # -- the decision -------------------------------------------------------
 
     def decide(self, *, backlog: int, oldest_submit_s: float | None,
@@ -292,6 +324,21 @@ class FleetScheduler(ContinuousBatchingScheduler):
             prev = self._replica_class_step_s.get(ckey)
             self._replica_class_step_s[ckey] = (
                 seconds if prev is None else 0.8 * prev + 0.2 * seconds)
+
+    def debug_state(self) -> dict:
+        """The base tables plus the per-replica EWMAs placement reads:
+        ``replica_step_s`` is ``{"<replica>/<bucket>": seconds}``,
+        ``replica_class_step_s`` ``{"<replica>/<bucket>/<class>":
+        seconds}``."""
+        return {
+            **super().debug_state(),
+            "n_replicas": self.n_replicas,
+            "replica_step_s": {f"{r}/{b}": v for (r, b), v
+                               in self._replica_step_s.items()},
+            "replica_class_step_s": {
+                f"{r}/{b}/{cls}": v for (r, b, cls), v
+                in self._replica_class_step_s.items()},
+        }
 
     def replica_estimate(self, replica: int, bucket: int,
                          occupancy: float | None = None) -> float:

@@ -610,9 +610,10 @@ def test_stats_schema_shared_and_versioned(small):
               "buckets", "wall_s", "paper_fps", "realtime",
               "latency_p50_s", "latency_p95_s", "latency_p99_s",
               "latency_mean_s", "queue_depth_peak"}
-    # queue_depth_peak joined the shared vocabulary in v2 — pin the
-    # version so a schema change can't ship without bumping it
-    assert SERVE_STATS_VERSION == 2
+    # queue_depth_peak joined the shared vocabulary in v2; v3 made the
+    # latency_* fields histogram-backed (same keys, bounded approximation)
+    # — pin the version so a schema change can't ship without bumping it
+    assert SERVE_STATS_VERSION == 3
     eng = MicroBatchEngine(model)
     eng.submit(imgs[:2])
     eng.close()                             # protocol close == run()
